@@ -1,0 +1,64 @@
+"""Shared benchmark utilities: the trained tiny model + eval sequences."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+from typing import Dict, Tuple
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_config
+from repro.data.pipeline import ShardedLoader, SyntheticCorpus
+from repro.models import decoder
+from repro.training import optimizer as opt_lib
+from repro.training.loop import train
+from repro.training.schedule import warmup_cosine
+
+CKPT_DIR = Path("artifacts/models/tinylm")
+
+
+def trained_tiny(steps: int = 500) -> Tuple[object, Dict]:
+    """Load the cached trained tinylm (train it if absent)."""
+    cfg = get_config("tinylm")
+    mgr = CheckpointManager(str(CKPT_DIR), interval=100, keep=2)
+    if mgr.latest_step() is None:
+        opt = opt_lib.adamw(warmup_cosine(3e-3, 25, steps))
+        corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
+        loader = ShardedLoader(corpus, batch=16, seq_len=256, seed=1)
+        res = train(cfg, opt, loader, steps, ckpt=mgr, log_every=100)
+        loader.close()
+        mgr.save(int(res.state["step"]), res.state, force=True)
+        mgr.wait()
+    state, _ = mgr.restore_latest()
+    params = jax.tree.map(jnp.asarray, state["params"])
+    return cfg, params
+
+
+def eval_sequences(cfg, n: int, length: int, seed: int = 123) -> jax.Array:
+    """Held-out sequences from the same synthetic language (different
+    seeds than training)."""
+    corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
+    rows = [corpus.sample(length, seed=seed + 7919 * i) for i in range(n)]
+    return jnp.asarray(np.stack(rows))
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,339 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Quality numbers come from
+the framework-trained tiny char-LM (the container is CPU-only; DESIGN.md
+section 7 explains the mechanism-scale validation strategy).  Hardware
+numbers for the assigned architectures come from the dry-run artifacts
+(analytic + XLA roofline terms) — see also EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run --only table2,fig4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, eval_sequences, timeit, trained_tiny
+from repro.core import GriffinConfig, evaluate
+from repro.core.flocking import flocking_score, pairwise_jaccard, sequence_statistic
+from repro.models import decoder
+
+
+# ---------------------------------------------------------------------------
+# Figure 1 / 2: flocking + (lack of) inter-sample similarity
+# ---------------------------------------------------------------------------
+
+def bench_flocking() -> None:
+    cfg, params = trained_tiny()
+    seqs = eval_sequences(cfg, n=6, length=192)
+    t0 = time.perf_counter()
+    # per-layer activations of sample 0 (want_z)
+    _, aux = decoder.forward(params, cfg, seqs[:1], collect_stats=True,
+                             want_z=True, remat=False, logits_mode="last")
+    st = decoder.prune_stats_tree(aux.stats, cfg)
+    z_leaves = jax.tree.leaves(
+        jax.tree.map(lambda d: d["z"], st,
+                     is_leaf=lambda x: isinstance(x, dict) and "z" in x)
+    )
+    # z_leaves: stacked [n, 1, S, F] per scan segment
+    scores = []
+    for leaf in z_leaves:
+        zz = leaf.reshape(-1, *leaf.shape[-2:]) if leaf.ndim == 4 else leaf[None]
+        for li in range(zz.shape[0]):
+            scores.append(flocking_score(zz[li]))
+    dt = (time.perf_counter() - t0) * 1e6
+    emit("fig1_flocking_intra_seq_jaccard", dt,
+         f"mean={np.mean(scores):.3f} min={np.min(scores):.3f} "
+         f"max={np.max(scores):.3f} layers={len(scores)}")
+
+    # Figure 2: inter-sample Jaccard of top-50% expert sets (layer 2)
+    stats = []
+    for i in range(seqs.shape[0]):
+        _, aux_i = decoder.forward(params, cfg, seqs[i : i + 1],
+                                   collect_stats=True, want_z=True,
+                                   remat=False, logits_mode="last")
+        st_i = decoder.prune_stats_tree(aux_i.stats, cfg)
+        z = jax.tree.leaves(
+            jax.tree.map(lambda d: d["z"], st_i,
+                         is_leaf=lambda x: isinstance(x, dict) and "z" in x)
+        )[0][2, 0]  # layer 2 of the scan stack
+        stats.append(sequence_statistic(z))
+    inter = pairwise_jaccard(stats, k=cfg.d_ff // 2)
+    # intra-sequence: stats from the two halves of the same sequence
+    _, auxh = decoder.forward(params, cfg, seqs[:1, :96], collect_stats=True,
+                              want_z=True, remat=False, logits_mode="last")
+    zh = jax.tree.leaves(jax.tree.map(
+        lambda d: d["z"], decoder.prune_stats_tree(auxh.stats, cfg),
+        is_leaf=lambda x: isinstance(x, dict) and "z" in x))[0][2, 0]
+    _, auxh2 = decoder.forward(params, cfg, seqs[:1, 96:192],
+                               collect_stats=True, want_z=True, remat=False,
+                               logits_mode="last")
+    zh2 = jax.tree.leaves(jax.tree.map(
+        lambda d: d["z"], decoder.prune_stats_tree(auxh2.stats, cfg),
+        is_leaf=lambda x: isinstance(x, dict) and "z" in x))[0][2, 0]
+    from repro.core.flocking import jaccard_topk
+
+    intra = jaccard_topk(sequence_statistic(zh), sequence_statistic(zh2),
+                         cfg.d_ff // 2)
+    emit("fig2_jaccard_topk50", 0.0,
+         f"inter_sample_mean={inter.mean():.3f} intra_sequence={intra:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 1: classification-sim at 50% FF sparsity
+# ---------------------------------------------------------------------------
+
+def bench_table1_classification() -> None:
+    cfg, params = trained_tiny()
+    seqs = eval_sequences(cfg, n=32, length=128)
+    for method in ("full", "griffin", "magnitude", "wanda"):
+        t0 = time.perf_counter()
+        r = evaluate.classification_sim(params, cfg, seqs, method, 0.5)
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"table1_class_{method}", dt,
+             f"acc={r['acc']:.3f} agree_full={r['agree_full']:.3f} "
+             f"nll={r['nll']:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 2: generation quality (teacher-forced PPL) at 50% FF sparsity
+# ---------------------------------------------------------------------------
+
+def bench_table2_generation() -> None:
+    cfg, params = trained_tiny()
+    seqs = eval_sequences(cfg, n=8, length=192)
+    P = 128
+    for method in ("full", "griffin", "magnitude", "wanda"):
+        t0 = time.perf_counter()
+        ppl = evaluate.generation_ppl(params, cfg, seqs, P, method, 0.5)
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"table2_gen_{method}", dt, f"ppl={ppl:.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Figure 4: performance vs FF sparsity
+# ---------------------------------------------------------------------------
+
+def bench_fig4_sparsity() -> None:
+    cfg, params = trained_tiny()
+    seqs = eval_sequences(cfg, n=6, length=192)
+    P = 128
+    base = evaluate.generation_ppl(params, cfg, seqs, P, "full")
+    for sp in (0.0, 0.25, 0.5, 0.75, 0.9):
+        t0 = time.perf_counter()
+        ppl = evaluate.generation_ppl(params, cfg, seqs, P, "griffin", sp)
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"fig4_sparsity_{sp}", dt,
+             f"ppl={ppl:.4f} rel={base / ppl:.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Figure 5: prompt length vs generation length
+# ---------------------------------------------------------------------------
+
+def bench_fig5_prompt_gen() -> None:
+    cfg, params = trained_tiny()
+    for P in (32, 64, 128):
+        for G in (32, 64, 128):
+            seqs = eval_sequences(cfg, n=4, length=P + G)
+            full = evaluate.generation_ppl(params, cfg, seqs, P, "full")
+            t0 = time.perf_counter()
+            g = evaluate.generation_ppl(params, cfg, seqs, P, "griffin", 0.5)
+            dt = (time.perf_counter() - t0) * 1e6
+            emit(f"fig5_P{P}_G{G}", dt,
+                 f"ppl_full={full:.4f} ppl_griffin={g:.4f} "
+                 f"delta={g - full:+.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 4: sharing selected neurons across samples (batched eq. 7)
+# ---------------------------------------------------------------------------
+
+def bench_table4_batching() -> None:
+    cfg, params = trained_tiny()
+    all_seqs = eval_sequences(cfg, n=16, length=192)
+    P = 128
+
+    # GRIFFIN with batch sizes 1 / 4 / 16 (eq. 7 aggregation per batch)
+    for bs in (1, 4, 16):
+        t0 = time.perf_counter()
+        ppls = []
+        for i in range(0, 16, bs):
+            ppls.append(evaluate.generation_ppl(
+                params, cfg, all_seqs[i : i + bs], P, "griffin", 0.5))
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"table4_griffin_b{bs}", dt, f"ppl={np.mean(ppls):.4f}")
+
+    # "Global": one expert set from the whole dataset's aggregated stats
+    _, aux = evaluate.prompt_stats(params, cfg, all_seqs[:, :P])
+    pruned, _ = evaluate.build_pruned("griffin", params, cfg, aux.stats, 0.5)
+    B, S = all_seqs.shape
+    cache = decoder.init_cache(cfg, B, S)
+    cache = decoder.fill_cache_from_prefill(cfg, cache, aux.kv)
+    dec = jax.jit(lambda c, t, pos: decoder.decode_step(
+        params, cfg, c, t, pos, pruned))
+    nll, cnt = 0.0, 0
+    t0 = time.perf_counter()
+    for t in range(P - 1, S - 1):
+        logits, cache = dec(cache, all_seqs[:, t : t + 1], jnp.int32(t))
+        logp = jax.nn.log_softmax(logits[:, 0].astype(jnp.float32), -1)
+        nll += float(-jnp.sum(jnp.take_along_axis(
+            logp, all_seqs[:, t + 1][:, None], 1)))
+        cnt += B
+    dt = (time.perf_counter() - t0) * 1e6
+    emit("table4_global_static", dt, f"ppl={np.exp(nll / cnt):.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 5 (Appendix B): selection method ablation
+# ---------------------------------------------------------------------------
+
+def bench_table5_selection() -> None:
+    cfg, params = trained_tiny()
+    seqs = eval_sequences(cfg, n=6, length=192)
+    P = 128
+    rng = jax.random.PRNGKey(0)
+    for method in ("griffin", "sampling", "topk_sampling", "blocks"):
+        t0 = time.perf_counter()
+        ppl = evaluate.generation_ppl(params, cfg, seqs, P, method, 0.5, rng=rng)
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"table5_select_{method}", dt, f"ppl={ppl:.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 3: generation latency (measured tiny + derived v5e)
+# ---------------------------------------------------------------------------
+
+def bench_table3_latency() -> None:
+    cfg, params = trained_tiny()
+    B, P, C = 1, 128, 256
+    seqs = eval_sequences(cfg, n=B, length=P)
+    _, aux = evaluate.prompt_stats(params, cfg, seqs)
+    cache = decoder.init_cache(cfg, B, C)
+    cache = decoder.fill_cache_from_prefill(cfg, cache, aux.kv)
+    tok = seqs[:, -1:]
+
+    variants = {
+        "full": (None, 0.0),
+        "griffin50": ("griffin", 0.5),
+        "griffin75": ("griffin", 0.75),
+        "magnitude50": ("magnitude", 0.5),
+    }
+    for name, (method, sp) in variants.items():
+        pruned = None
+        if method:
+            pruned, _ = evaluate.build_pruned(method, params, cfg, aux.stats, sp)
+        dec = jax.jit(lambda c, t, pr=pruned: decoder.decode_step(
+            params, cfg, c, t, jnp.int32(P), pr))
+        us = timeit(dec, cache, tok, warmup=3, iters=10)
+        emit(f"table3_decode_{name}", us, f"B={B} ctx={P} (CPU wall-time)")
+
+    # derived v5e decode-step latency for the big archs (analytic roofline)
+    from repro.analysis import analytic
+    from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
+    from repro.configs.registry import get_config
+    from repro.configs.shapes import SHAPES
+
+    for arch in ("yi-9b", "gemma3-27b", "command-r-plus-104b"):
+        acfg = get_config(arch)
+        shape = SHAPES["decode_32k"]
+        full = analytic.cell_cost(acfg, shape, griffin_sparsity=0.0)
+        grif = analytic.cell_cost(acfg, shape, griffin_sparsity=0.5)
+        chips = 256
+        t_full = max(full.flops / chips / PEAK_FLOPS,
+                     full.hbm_bytes / chips / HBM_BW)
+        t_grif = max(grif.flops / chips / PEAK_FLOPS,
+                     grif.hbm_bytes / chips / HBM_BW)
+        emit(f"table3_v5e_derived_{arch}", t_full * 1e6,
+             f"griffin_us={t_grif * 1e6:.1f} speedup={t_full / t_grif:.3f}x "
+             f"(per decode step, 256 chips)")
+
+
+# ---------------------------------------------------------------------------
+# Kernels: wall time (interpret mode) + correctness confirmation
+# ---------------------------------------------------------------------------
+
+def bench_kernels() -> None:
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    B, D, F = 4, 256, 2048
+    x = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+    ws = [jnp.asarray(rng.normal(size=(F, D)) * 0.05, jnp.float32)
+          for _ in range(3)]
+    ids = jnp.arange(8, dtype=jnp.int32)
+    us = timeit(lambda: ops.griffin_ffn_decode(x, *ws, ids), iters=3)
+    err = float(jnp.max(jnp.abs(
+        ops.griffin_ffn_decode(x, *ws, ids) - ops.griffin_ffn_ref(x, *ws, ids, 128)
+    )))
+    emit("kernel_griffin_ffn_interpret", us, f"max_err_vs_ref={err:.2e}")
+
+    z = jnp.asarray(rng.normal(size=(512, F)), jnp.float32)
+    us = timeit(lambda: ops.griffin_stat(z), iters=3)
+    err = float(jnp.max(jnp.abs(ops.griffin_stat(z) - ops.expert_stat_ref(z))))
+    emit("kernel_expert_stat_interpret", us, f"max_err_vs_ref={err:.2e}")
+
+
+# ---------------------------------------------------------------------------
+# Roofline table from dry-run artifacts
+# ---------------------------------------------------------------------------
+
+def bench_roofline_table() -> None:
+    art = Path("artifacts/dryrun")
+    if not art.exists():
+        emit("roofline_table", 0.0, "no dry-run artifacts; run scripts/dryrun_all.sh")
+        return
+    n = 0
+    for f in sorted(art.glob("*_p1.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        emit(
+            f"roofline_{rec['arch']}_{rec['shape']}",
+            r["bound_s"] * 1e6,
+            f"dominant={r['dominant']} compute={r['compute_s']:.2e} "
+            f"memory={r['memory_s']:.2e} coll={r['collective_s']:.2e} "
+            f"useful={r['useful_ratio']:.3f}",
+        )
+        n += 1
+    emit("roofline_cells_ok", float(n), "cells with successful dry-run")
+
+
+BENCHES = {
+    "fig1_2": bench_flocking,
+    "table1": bench_table1_classification,
+    "table2": bench_table2_generation,
+    "fig4": bench_fig4_sparsity,
+    "fig5": bench_fig5_prompt_gen,
+    "table4": bench_table4_batching,
+    "table5": bench_table5_selection,
+    "table3": bench_table3_latency,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline_table,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        BENCHES[name.strip()]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Batched serving with continuous batching + per-slot GRIFFIN.
+
+  PYTHONPATH=src python examples/serve_batched.py
+
+Submits a stream of requests with mixed prompt/generation lengths to a
+fixed-slot continuous batcher; each slot carries its own GRIFFIN expert
+set selected from its own prompt (the paper's adaptive property).
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).parent.parent))
+
+import numpy as np
+
+from benchmarks.common import trained_tiny
+from repro.core import GriffinConfig
+from repro.data.pipeline import SyntheticCorpus
+from repro.serving.engine import ContinuousBatcher
+
+
+def main() -> None:
+    cfg, params = trained_tiny()
+    corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
+
+    cb = ContinuousBatcher(
+        cfg, params, n_slots=4, max_len=128,
+        gcfg=GriffinConfig(sparsity=0.5, per_shard_topk=False),
+    )
+    rng = np.random.default_rng(0)
+    n_req = 10
+    for rid in range(n_req):
+        plen = int(rng.integers(16, 64))
+        gen = int(rng.integers(8, 24))
+        cb.submit(corpus.sample(plen, seed=1000 + rid), max_new=gen, rid=rid)
+
+    t0 = time.perf_counter()
+    results = cb.run()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(v) for v in results.values())
+    print(f"served {n_req} requests / {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens / dt:.1f} tok/s on 1 CPU core, 4 slots)")
+    for rid in sorted(results):
+        print(f"  req {rid}: {len(results[rid])} tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""HLO text analysis: collective-byte accounting for the roofline.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+compiled (SPMD-partitioned, per-device) HLO module:  every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` op contributes wire bytes estimated from its
+shape and replica-group size under ring algorithms:
+
+    all-gather:          out_bytes * (n-1)/n
+    reduce-scatter:      in_bytes  * (n-1)/n
+    all-reduce:          2 * bytes * (n-1)/n     (RS + AG)
+    all-to-all:          bytes * (n-1)/n
+    collective-permute:  bytes
+
+Shapes in the partitioned module are already per-device, so the sums
+are per-chip wire bytes — divide by per-chip link bandwidth for the
+collective roofline term.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over a shape or tuple-shape string like
+    ``(f32[8,128], bf16[4])`` or ``bf16[8,128]``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1)
+        return max(1, len([x for x in first.split(",") if x.strip() != ""]))
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota v2 format [num_groups, group_size]
+        return max(1, int(m.group(2)))
+    return default
+
+
+def _crosses_pods(line: str, pod_size: int) -> bool:
+    """True if any replica group spans devices in different pods
+    (those bytes ride DCN, not ICI)."""
+    if pod_size <= 0:
+        return False
+    m = _GROUPS_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x.strip() != ""]
+        return len({i // pod_size for i in ids}) > 1
+    m = re.search(
+        r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", line
+    )
+    if m:  # iota format: reconstruct the device list exactly
+        import numpy as np
+
+        ng, sz = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(ng, sz)
+        return bool((groups // pod_size != groups[:, :1] // pod_size).any())
+    return False
+
+
+def collective_bytes(hlo_text: str, total_devices: int,
+                     pod_size: int = 0) -> Dict[str, float]:
+    """Per-chip wire-byte estimate per collective kind + grand total.
+
+    ``pod_size`` > 0 additionally splits bytes into ICI (intra-pod) vs
+    DCN (pod-crossing replica groups) — the DCN share is what gradient
+    compression targets on multi-pod meshes."""
+    out: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    dcn_bytes = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "x = TYPE[...] all-reduce(...)" — op name after the shape
+        opm = re.search(r"=\s*([^=]*?)\s+([\w-]+)\(", s)
+        if not opm:
+            continue
+        op = opm.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):  # e.g. all-reduce-start
+                base = c
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        shape_str = opm.group(1)
+        nbytes = _shape_bytes(shape_str)
+        n = _group_size(s, total_devices)
+        if base == "all-gather":
+            wire = nbytes * (n - 1) / max(n, 1)
+        elif base == "reduce-scatter":
+            wire = nbytes * (n - 1)  # out is per-shard; in ~= out*n
+        elif base == "all-reduce":
+            wire = 2 * nbytes * (n - 1) / max(n, 1)
+        elif base == "all-to-all":
+            wire = nbytes * (n - 1) / max(n, 1)
+        else:  # collective-permute
+            wire = nbytes
+        out[base] += wire
+        counts[base] += 1
+        if pod_size and _crosses_pods(s, pod_size):
+            dcn_bytes += wire
+    out_total = sum(out.values())
+    result = {f"bytes_{k}": v for k, v in out.items()}
+    result.update({f"count_{k}": float(v) for k, v in counts.items()})
+    result["bytes_total"] = out_total
+    if pod_size:
+        result["bytes_dcn"] = dcn_bytes
+        result["bytes_ici"] = out_total - dcn_bytes
+    return dict(result)
+
+
+def count_ops(hlo_text: str, names=("fusion", "custom-call", "while", "dot",
+                                    "convolution")) -> Dict[str, int]:
+    counts = {n: 0 for n in names}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*[^=]*?\s+([\w-]+)\(", line)
+        if m and m.group(1) in counts:
+            counts[m.group(1)] += 1
+    return counts

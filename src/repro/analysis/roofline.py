@@ -1,0 +1,125 @@
+"""Three-term roofline model for TPU v5e from compiled dry-run artifacts.
+
+    compute term    = FLOPs_per_chip   / peak_FLOPs_per_chip
+    memory term     = HBM bytes/chip   / HBM bandwidth
+    collective term = wire bytes/chip  / ICI link bandwidth
+
+``cost_analysis()`` of the SPMD-partitioned module reports per-chip
+FLOPs/bytes; collective bytes come from ``repro.analysis.hlo``.
+
+MODEL_FLOPS (the "useful FLOPs" yardstick) = 6*N*D for dense training,
+2*N*D for inference forward passes (N = params, D = tokens processed),
+with N replaced by active params for MoE.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_per_chip: float = 0.0
+    hlo_flops_per_chip: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        if self.hlo_flops_per_chip:
+            return self.model_flops_per_chip / self.hlo_flops_per_chip
+        return None
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """Fraction of the compute roofline achievable if the dominant
+        term were the only cost: MODEL_FLOPS-time / bound-time."""
+        if self.bound_s <= 0:
+            return None
+        return (self.model_flops_per_chip / PEAK_FLOPS) / self.bound_s
+
+    def as_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_costs(
+    flops_per_chip: float,
+    hbm_bytes_per_chip: float,
+    collective_bytes_per_chip: float,
+    model_flops_total: float = 0.0,
+    chips: int = 1,
+) -> Roofline:
+    return Roofline(
+        compute_s=flops_per_chip / PEAK_FLOPS,
+        memory_s=hbm_bytes_per_chip / HBM_BW,
+        collective_s=collective_bytes_per_chip / ICI_BW,
+        model_flops_per_chip=model_flops_total / max(chips, 1),
+        hlo_flops_per_chip=flops_per_chip,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS accounting
+# ---------------------------------------------------------------------------
+
+def count_params(cfg) -> Dict[str, int]:
+    """Exact total params from the spec tree + analytic active params."""
+    import numpy as np
+
+    from repro.models import decoder, param as param_lib
+
+    total = param_lib.param_count(decoder.model_specs(cfg))
+    active = total
+    if cfg.num_experts:
+        glu = 3 if cfg.glu else 2
+        per_expert = glu * cfg.d_model * cfg.moe_d_ff
+        n_moe_layers = cfg.num_layers - cfg.num_dense_layers
+        inactive = (cfg.num_experts - cfg.experts_per_token) * per_expert * n_moe_layers
+        active = total - inactive
+    return {"total": int(total), "active": int(active)}
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (train) / 2*N*D (inference), N = active params, D = tokens.
+
+    For decode shapes D = global_batch (one new token per sequence); the
+    attention read over the KV cache is accounted in the memory term, not
+    here (classical 6ND ignores attention; we report it as the yardstick
+    the field uses)."""
+    n = count_params(cfg)["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,11 @@
+from repro.configs.base import ModelConfig, reduce_for_smoke
+from repro.configs.shapes import SHAPES, ShapeConfig, cell_supported, smoke_shape
+
+__all__ = [
+    "ModelConfig",
+    "reduce_for_smoke",
+    "SHAPES",
+    "ShapeConfig",
+    "cell_supported",
+    "smoke_shape",
+]

@@ -1,0 +1,17 @@
+from repro.core.griffin import (
+    GriffinConfig,
+    aggregate_stats,
+    compact,
+    compact_tree,
+    select_experts,
+    select_tree,
+)
+
+__all__ = [
+    "GriffinConfig",
+    "aggregate_stats",
+    "compact",
+    "compact_tree",
+    "select_experts",
+    "select_tree",
+]

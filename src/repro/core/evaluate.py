@@ -1,0 +1,203 @@
+"""Paper evaluation protocols (sections 5.1, 5.3).
+
+* ``generation_ppl`` — Figure 5's protocol: a length-S sequence is split
+  into prompt (first P, full FF blocks, builds the KV cache) and
+  generation (last G, teacher-forced through the *pruned* decode path);
+  reports perplexity over the generation partition only.
+* ``classification_sim`` — Table 1's protocol: all tokens but the last
+  are the prompt; the model takes one generation step; reports NLL of
+  the gold last token + top-1 agreement with the full model.
+* Methods: full | griffin | griffin_batched (eq. 7 across the batch) |
+  magnitude (static neuron pruning) | wanda (Adaptive Wanda, unstructured)
+  | sampling / topk_sampling (Appendix B) | blocks (TPU block-aligned).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import griffin as griffin_lib
+from repro.core import selector as selector_lib
+from repro.core import wanda as wanda_lib
+from repro.models import decoder
+
+METHODS = ("full", "griffin", "griffin_batched", "magnitude", "wanda",
+           "sampling", "topk_sampling", "blocks")
+
+
+def _map_ffn(tree_a, fn, *rest):
+    """Map over FF-param-dict leaves."""
+    return jax.tree.map(
+        fn, tree_a, *rest,
+        is_leaf=lambda x: isinstance(x, dict) and "w1" in x,
+    )
+
+
+def _stats_leaves(stats, cfg):
+    return decoder.prune_stats_tree(stats, cfg)
+
+
+def build_pruned(
+    method: str,
+    params: Dict,
+    cfg,
+    stats: Optional[Dict],
+    sparsity: float,
+    rng: Optional[jax.Array] = None,
+    per_sample: bool = True,
+) -> Tuple[Optional[Dict], Optional[Dict]]:
+    """Returns (pruned_ffn_tree, replacement_params).
+
+    Exactly one is non-None: structured methods compact weights
+    (pruned tree fed to the decode path); wanda masks them in place
+    (replacement full-shape params).
+    """
+    if method == "full":
+        return None, None
+    ffn_tree = decoder.extract_ffn_tree(params, cfg)
+
+    if method == "wanda":
+        st = _stats_leaves(stats, cfg)
+
+        def mask_one(p, s):
+            x_norm = jnp.sqrt(s["x_sq"])
+            z_norm = jnp.sqrt(s["z_sq"])
+            if x_norm.ndim == 2:  # scan-stacked [n, D]
+                return jax.vmap(
+                    lambda pp, xn, zn: wanda_lib.prune_ffn_wanda(pp, xn, zn, sparsity)
+                )(p, x_norm, z_norm)
+            return wanda_lib.prune_ffn_wanda(p, x_norm, z_norm, sparsity)
+
+        masked = _map_ffn(ffn_tree, mask_one, st)
+        new_params = replace_ffn_tree(params, cfg, masked)
+        return None, new_params
+
+    if method == "magnitude":
+        def sel_one(p):
+            def single(pp):
+                s = selector_lib.magnitude_statistic(pp)
+                k = max(1, int(round(s.shape[-1] * (1.0 - sparsity))))
+                return selector_lib.select_topk(s, k)
+            if p["w1"].ndim == 3:  # scan-stacked
+                return jax.vmap(single)(p)
+            return single(p)
+
+        idx_tree = _map_ffn(ffn_tree, sel_one)
+        return griffin_lib.compact_tree(ffn_tree, idx_tree), None
+
+    # GRIFFIN variants
+    mode = {"griffin": "topk", "griffin_batched": "topk",
+            "sampling": "sampling", "topk_sampling": "topk_sampling",
+            "blocks": "blocks"}[method]
+    gcfg = griffin_lib.GriffinConfig(sparsity=sparsity, mode=mode,
+                                     per_shard_topk=False)
+    st = _stats_leaves(stats, cfg)
+    sel = griffin_lib.select_tree(st, gcfg, rng=rng)
+    return griffin_lib.compact_tree(ffn_tree, sel), None
+
+
+def replace_ffn_tree(params: Dict, cfg, new_ffn: Dict) -> Dict:
+    """Deep-copy params with FF blocks (dense / MoE shared) replaced."""
+    import copy
+
+    out = jax.tree.map(lambda x: x, params)  # shallow-ish copy of leaves
+    out = jax.tree_util.tree_map(lambda x: x, params)
+    # rebuild nested dicts so we can mutate
+    def deep(d):
+        return {k: deep(v) if isinstance(v, dict) else v for k, v in d.items()}
+
+    out = deep(params)
+    for i, seg in enumerate(decoder.build_plan(cfg)):
+        key = f"seg{i}"
+        for j, desc in enumerate(seg.descs):
+            name = f"pos{j}" if seg.kind == "scan" else f"layer{j}"
+            if name not in new_ffn.get(key, {}):
+                continue
+            if desc.ffn == "dense":
+                out[key][name]["ffn"] = new_ffn[key][name]
+            elif desc.ffn == "moe" and cfg.num_shared_experts:
+                out[key][name]["ffn"]["shared"] = new_ffn[key][name]
+    return out
+
+
+def prompt_stats(params, cfg, prompt, rng=None):
+    """Full-model prompt pass: last logits, cache material, stats."""
+    logits, aux = decoder.forward(
+        params, cfg, prompt, collect_stats=True, want_kv=True, remat=False,
+        logits_mode="last", q_chunk=256,
+    )
+    return logits[:, 0], aux
+
+
+def generation_ppl(
+    params: Dict,
+    cfg,
+    tokens: jax.Array,  # [B, S]
+    prompt_len: int,
+    method: str,
+    sparsity: float = 0.5,
+    rng: Optional[jax.Array] = None,
+    decode_jit=None,
+) -> float:
+    """Teacher-forced PPL of tokens[P:] with the prompt encoded by the
+    FULL model (its KV cache) and generation through the pruned path."""
+    B, S = tokens.shape
+    P = prompt_len
+    _, aux = prompt_stats(params, cfg, tokens[:, :P], rng)
+    pruned, repl = build_pruned(method, params, cfg, aux.stats, sparsity, rng)
+    run_params = repl if repl is not None else params
+
+    cache = decoder.init_cache(cfg, B, S)
+    cache = decoder.fill_cache_from_prefill(cfg, cache, aux.kv)
+
+    if decode_jit is None:
+        decode_jit = jax.jit(
+            lambda p, c, pr, t, pos: decoder.decode_step(p, cfg, c, t, pos, pr)
+        )
+    nll_sum, count = 0.0, 0
+    for t in range(P - 1, S - 1):
+        logits, cache = decode_jit(
+            run_params, cache, pruned, tokens[:, t : t + 1], jnp.int32(t)
+        )
+        logp = jax.nn.log_softmax(logits[:, 0].astype(jnp.float32), axis=-1)
+        gold = tokens[:, t + 1]
+        nll_sum += float(-jnp.sum(jnp.take_along_axis(logp, gold[:, None], 1)))
+        count += B
+    return float(np.exp(nll_sum / max(count, 1)))
+
+
+def classification_sim(
+    params: Dict,
+    cfg,
+    tokens: jax.Array,  # [B, S]: first S-1 = prompt, last = the "class"
+    method: str,
+    sparsity: float = 0.5,
+    rng: Optional[jax.Array] = None,
+) -> Dict[str, float]:
+    """Table-1 protocol: one generation step after an (S-1)-token prompt."""
+    B, S = tokens.shape
+    prompt = tokens[:, : S - 1]
+    _, aux = prompt_stats(params, cfg, prompt, rng)
+    pruned, repl = build_pruned(method, params, cfg, aux.stats, sparsity, rng)
+    run_params = repl if repl is not None else params
+
+    cache = decoder.init_cache(cfg, B, S)
+    cache = decoder.fill_cache_from_prefill(cfg, cache, aux.kv)
+    logits, _ = decoder.decode_step(
+        run_params, cfg, cache, tokens[:, S - 2 : S - 1], jnp.int32(S - 2), pruned
+    )
+    logits_full, _ = decoder.decode_step(
+        params, cfg, cache, tokens[:, S - 2 : S - 1], jnp.int32(S - 2), None
+    )
+    logp = jax.nn.log_softmax(logits[:, 0].astype(jnp.float32), -1)
+    gold = tokens[:, -1]
+    nll = float(-jnp.mean(jnp.take_along_axis(logp, gold[:, None], 1)))
+    agree = float(jnp.mean(
+        (jnp.argmax(logits[:, 0], -1) == jnp.argmax(logits_full[:, 0], -1))
+        .astype(jnp.float32)
+    ))
+    acc = float(jnp.mean((jnp.argmax(logits[:, 0], -1) == gold).astype(jnp.float32)))
+    return {"nll": nll, "agree_full": agree, "acc": acc}

@@ -1,0 +1,69 @@
+"""Flocking analysis (section 4.1, Figures 1-2, Appendices C/E).
+
+Tools to observe the paper's core phenomenon: relative FF activation
+magnitudes shared across tokens *within* a sequence (vertical streaks)
+but not *between* sequences (low inter-sample Jaccard similarity).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def relative_activations(z: jax.Array) -> jax.Array:
+    """Z-bar: rows (tokens) normalized to unit L2. z: [S,F] or [B,S,F]."""
+    zf = z.astype(jnp.float32)
+    n = jnp.linalg.norm(zf, axis=-1, keepdims=True)
+    return zf / jnp.maximum(n, 1e-20)
+
+
+def heatmap_data(z: jax.Array, tokens: int = 512, feats: int = 512) -> np.ndarray:
+    """|Z-bar| crop for Figure-1 style heat maps. z: [S,F]."""
+    zb = relative_activations(z)
+    return np.asarray(jnp.abs(zb[:tokens, :feats]))
+
+
+def flocking_score(z: jax.Array, top_frac: float = 0.05) -> float:
+    """Scalar summary of flocking strength in one sequence.
+
+    Mean pairwise Jaccard similarity between per-token top-``top_frac``
+    neuron sets — high = tokens agree on which neurons matter (flocking).
+    Computed via set-membership matmul (no pairwise loops).
+    """
+    zb = jnp.abs(relative_activations(z))  # [S,F]
+    S, F = zb.shape
+    k = max(1, int(F * top_frac))
+    _, idx = jax.lax.top_k(zb, k)
+    mem = jnp.zeros((S, F), jnp.float32)
+    mem = jax.vmap(lambda m, i: m.at[i].set(1.0))(mem, idx)
+    inter = mem @ mem.T  # [S,S] intersections
+    union = 2 * k - inter
+    jac = inter / union
+    off = (jnp.sum(jac) - S) / (S * (S - 1))
+    return float(off)
+
+
+def sequence_statistic(z: jax.Array) -> jax.Array:
+    """Eq. 6 statistic s for one sequence. z: [S,F] -> [F]."""
+    zb = relative_activations(z)
+    return jnp.linalg.norm(zb, axis=0)
+
+
+def jaccard_topk(s_a: jax.Array, s_b: jax.Array, k: int) -> float:
+    """Jaccard similarity of two sequences' top-k expert sets (Figure 2)."""
+    ia = set(np.asarray(jax.lax.top_k(s_a, k)[1]).tolist())
+    ib = set(np.asarray(jax.lax.top_k(s_b, k)[1]).tolist())
+    return len(ia & ib) / len(ia | ib)
+
+
+def pairwise_jaccard(stats: List[jax.Array], k: int) -> np.ndarray:
+    """Mean pairwise Jaccard across samples at top-k (Figure 2 aggregate)."""
+    n = len(stats)
+    vals = []
+    for i in range(n):
+        for j in range(i + 1, n):
+            vals.append(jaccard_topk(stats[i], stats[j], k))
+    return np.asarray(vals)

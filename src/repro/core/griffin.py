@@ -1,0 +1,154 @@
+"""GRIFFIN — Gating by Repetition In Feedforward Intermediate Neurons.
+
+The paper's algorithm (section 4.2), as a composable JAX module:
+
+1. **Prompt phase**: the model runs its full FF blocks and emits, per FF
+   layer, the per-sample squared statistic ``s_sq[b, j] = sum_t
+   z[b,t,j]^2 / ||z[b,t]||^2`` (eq. 6 squared; computed streaming inside
+   the layers, see ``repro.models.layers.ffn.griffin_stat_sq``).
+2. **Selection**: ``select_experts`` reduces ``s_sq`` to a single expert
+   index set per layer.  Batch aggregation follows eq. 7:
+   ``s-bar = sum_i s_i / sqrt(S_i)``.  Selection strategies live in
+   ``repro.core.selector`` (top-k default; sampling ablations;
+   TPU block-aligned mode).
+3. **Generation phase**: ``compact`` gathers rows/columns of the FF
+   weights (the paper's reparameterization) so every decode step runs
+   dense ``[k, D]`` matmuls.
+
+Distributed note (DESIGN.md section 3): under tensor parallelism the
+statistic arrives shard-local; with ``per_shard_topk`` the top-(k/TP)
+selection is computed inside each shard (collective-free, balanced).
+This is realized by reshaping the statistic to ``[TP, F/TP]`` and
+selecting per row — identical math on one host, shard-local under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selector as selector_lib
+
+
+@dataclass(frozen=True)
+class GriffinConfig:
+    sparsity: float = 0.5          # fraction of FF neurons REMOVED
+    mode: str = "topk"             # topk | sampling | topk_sampling | blocks
+    block_size: int = 128          # for mode="blocks" (TPU-aligned)
+    per_shard_topk: bool = True    # balanced shard-local selection under TP
+    tp_shards: int = 1             # logical shard count for balanced top-k
+    seed: int = 0                  # for sampling modes
+
+    def k_of(self, d_ff: int) -> int:
+        k = int(round(d_ff * (1.0 - self.sparsity)))
+        return max(1, min(d_ff, k))
+
+    def replace(self, **kw) -> "GriffinConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def aggregate_stats(s_sq: jax.Array, seq_lens: Optional[jax.Array] = None) -> jax.Array:
+    """Eq. 7: s-bar = sum_i s_i / sqrt(S_i) over the batch axis.
+
+    s_sq: [B, F] per-sample *squared* statistics; returns [F].
+    Note ``||[Z-bar]_{.,j}||_2 <= sqrt(S)``, so s_i/sqrt(S_i) weights each
+    sample's statistic to a comparable scale regardless of prompt length.
+    """
+    s = jnp.sqrt(jnp.maximum(s_sq.astype(jnp.float32), 0.0))
+    if seq_lens is not None:
+        s = s / jnp.sqrt(seq_lens.astype(jnp.float32))[:, None]
+    return jnp.sum(s, axis=0)
+
+
+def select_experts(
+    s_sq: jax.Array,
+    gcfg: GriffinConfig,
+    d_ff: Optional[int] = None,
+    seq_lens: Optional[jax.Array] = None,
+    rng: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Reduce statistics to a sorted expert index set.
+
+    s_sq: [B, F] (batch aggregated via eq. 7) or [F].
+    Returns idx: [k] int32, sorted ascending (gather-friendly).
+    """
+    s = (
+        aggregate_stats(s_sq, seq_lens)
+        if s_sq.ndim == 2
+        else jnp.sqrt(jnp.maximum(s_sq.astype(jnp.float32), 0.0))
+    )
+    F = d_ff or s.shape[-1]
+    k = gcfg.k_of(F)
+    if gcfg.mode == "blocks":
+        return selector_lib.select_blocks(s, k, gcfg.block_size)
+    if gcfg.mode == "sampling":
+        return selector_lib.select_sampling(s, k, rng)
+    if gcfg.mode == "topk_sampling":
+        return selector_lib.select_topk_sampling(s, k, rng)
+    if gcfg.per_shard_topk and gcfg.tp_shards > 1 and F % gcfg.tp_shards == 0 \
+            and k % gcfg.tp_shards == 0:
+        return selector_lib.select_topk_per_shard(s, k, gcfg.tp_shards)
+    return selector_lib.select_topk(s, k)
+
+
+def compact(ffn_params: Dict, idx: jax.Array, shards: int = 1) -> Dict:
+    """Paper reparameterization: gather the expert neurons' weights."""
+    from repro.models.layers.ffn import compact_ffn_params
+
+    return compact_ffn_params(ffn_params, idx, shards=shards)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model helpers: the per-layer statistic trees produced by prefill
+# mirror the segment structure of the model params (see models/decoder.py).
+# ---------------------------------------------------------------------------
+
+def select_tree(
+    stats_tree: Any,
+    gcfg: GriffinConfig,
+    seq_lens: Optional[jax.Array] = None,
+    rng: Optional[jax.Array] = None,
+) -> Any:
+    """Map selection over a tree of stacked stats.
+
+    Leaves are stats dicts whose ``s_sq`` entries are [B, F] (single
+    layer) or [n, B, F] (scan-stacked); returns [k] / [n, k] indices.
+    """
+
+    def one(leaf) -> jax.Array:
+        s_sq = leaf["s_sq"] if isinstance(leaf, dict) else leaf
+        if s_sq.ndim == 3:  # [n, B, F] scan-stacked
+            return jax.vmap(lambda s: select_experts(s, gcfg, seq_lens=seq_lens,
+                                                     rng=rng))(s_sq)
+        return select_experts(s_sq, gcfg, seq_lens=seq_lens, rng=rng)
+
+    return jax.tree.map(
+        one, stats_tree,
+        is_leaf=lambda x: isinstance(x, dict) and "s_sq" in x,
+    )
+
+
+def compact_tree(ffn_params_tree: Any, idx_tree: Any, shards: int = 1) -> Any:
+    """Compact every FF block in a (possibly scan-stacked) params tree.
+
+    ``ffn_params_tree``/``idx_tree`` leaves are dicts of stacked weights
+    [n, D, F] etc. paired with idx [n, k]; vmapped gather per layer.
+    ``shards``: TP degree for shard-local gathers (per-shard selection).
+    """
+
+    def one(ffn_params: Dict, idx: jax.Array) -> Dict:
+        fn = lambda p, i: compact(p, i, shards=shards)
+        if idx.ndim == 2:  # scan-stacked
+            return jax.vmap(fn)(ffn_params, idx)
+        return fn(ffn_params, idx)
+
+    # tree of dicts: map at the dict level using idx tree structure
+    return jax.tree.map(
+        one,
+        ffn_params_tree,
+        idx_tree,
+        is_leaf=lambda x: isinstance(x, dict) and ("w1" in x or "w2" in x),
+    )

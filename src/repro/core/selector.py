@@ -1,0 +1,99 @@
+"""Expert-neuron selection strategies.
+
+``select_topk`` is the paper's default. ``select_sampling`` /
+``select_topk_sampling`` reproduce the Appendix B ablations (sampling is
+expected to *degrade* quality — we reproduce that finding).
+``select_blocks`` is the TPU-native block-aligned mode (DESIGN.md #3),
+``select_topk_per_shard`` the balanced TP variant.
+
+All selectors return **sorted** int32 indices so gathers are monotone
+(friendlier to XLA gather lowering) and so equal-k selections compare
+set-wise with ``jnp.array_equal``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def select_topk(s: jax.Array, k: int) -> jax.Array:
+    """Top-k neurons by statistic. s: [F] -> idx [k] sorted."""
+    _, idx = jax.lax.top_k(s, k)
+    return jnp.sort(idx).astype(jnp.int32)
+
+
+def select_topk_per_shard(s: jax.Array, k: int, shards: int) -> jax.Array:
+    """Balanced top-(k/shards) within each contiguous F/shards shard.
+
+    Under tensor parallelism the F axis is sharded contiguously over the
+    ``model`` mesh axis; selecting per shard keeps every shard's pruned
+    width identical (collective-free, load-balanced).
+    """
+    F = s.shape[-1]
+    fs, ks = F // shards, k // shards
+    sh = s.reshape(shards, fs)
+    _, idx = jax.lax.top_k(sh, ks)  # [shards, ks]
+    idx = idx + (jnp.arange(shards, dtype=idx.dtype) * fs)[:, None]
+    return jnp.sort(idx.reshape(-1)).astype(jnp.int32)
+
+
+def select_blocks(s: jax.Array, k: int, block: int) -> jax.Array:
+    """TPU block-aligned selection: sum-pool s^2 over contiguous blocks of
+    ``block`` neurons, choose top-(k//block) blocks, return their neuron
+    indices (k rounded down to a block multiple)."""
+    F = s.shape[-1]
+    assert F % block == 0, (F, block)
+    nb = F // block
+    kb = max(1, k // block)
+    pooled = jnp.sum(jnp.square(s.reshape(nb, block)), axis=-1)
+    _, bidx = jax.lax.top_k(pooled, kb)
+    bidx = jnp.sort(bidx)
+    idx = bidx[:, None] * block + jnp.arange(block, dtype=bidx.dtype)[None, :]
+    return idx.reshape(-1).astype(jnp.int32)
+
+
+def select_block_ids(s: jax.Array, k: int, block: int) -> jax.Array:
+    """Block ids only (scalar-prefetch input of the Pallas decode kernel)."""
+    F = s.shape[-1]
+    nb = F // block
+    kb = max(1, k // block)
+    pooled = jnp.sum(jnp.square(s.reshape(nb, block)), axis=-1)
+    _, bidx = jax.lax.top_k(pooled, kb)
+    return jnp.sort(bidx).astype(jnp.int32)
+
+
+def select_sampling(s: jax.Array, k: int, rng: Optional[jax.Array]) -> jax.Array:
+    """Appendix B: weighted sampling without replacement (Gumbel top-k)."""
+    assert rng is not None, "sampling selection needs an rng"
+    logw = jnp.log(jnp.maximum(s.astype(jnp.float32), 1e-20))
+    g = jax.random.gumbel(rng, s.shape, jnp.float32)
+    _, idx = jax.lax.top_k(logw + g, k)
+    return jnp.sort(idx).astype(jnp.int32)
+
+
+def select_topk_sampling(s: jax.Array, k: int, rng: Optional[jax.Array]) -> jax.Array:
+    """Appendix B: top-k/2 deterministic + weighted sampling for the rest."""
+    assert rng is not None
+    k1 = k // 2
+    _, top_idx = jax.lax.top_k(s, k1)
+    mask = jnp.zeros(s.shape, bool).at[top_idx].set(True)
+    logw = jnp.where(mask, -jnp.inf, jnp.log(jnp.maximum(s.astype(jnp.float32), 1e-20)))
+    g = jax.random.gumbel(rng, s.shape, jnp.float32)
+    _, rest = jax.lax.top_k(logw + g, k - k1)
+    return jnp.sort(jnp.concatenate([top_idx, rest])).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Static baselines (section 5 comparisons)
+# ---------------------------------------------------------------------------
+
+def magnitude_statistic(ffn_params: dict) -> jax.Array:
+    """Static neuron-magnitude pruning metric (section 5.1 baseline):
+    neuron-wise L2 norms of W1, elementwise-multiplied with those of W_g
+    for GLU variants."""
+    s = jnp.linalg.norm(ffn_params["w1"].astype(jnp.float32), axis=0)
+    if "wg" in ffn_params:
+        s = s * jnp.linalg.norm(ffn_params["wg"].astype(jnp.float32), axis=0)
+    return s

@@ -1,0 +1,52 @@
+"""Adaptive Wanda baseline (section 5.1).
+
+Uses the full model for the prompt, then prunes FF *weights* (not
+neurons) for generation using the prompt activations: the Wanda metric
+|W| * ||x||_2 per weight, thresholded per output row to the target
+sparsity.  Completely unstructured — it preserves quality like GRIFFIN
+but cannot shrink the matmul shapes, which is exactly the contrast the
+paper draws (Table 2 caption).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def wanda_mask(w: jax.Array, x_norm: jax.Array, sparsity: float) -> jax.Array:
+    """w: [D_in, D_out]; x_norm: [D_in] prompt-activation L2 norms.
+    Keeps the top (1-sparsity) weights per OUTPUT column by |w|*x_norm."""
+    metric = jnp.abs(w.astype(jnp.float32)) * x_norm[:, None].astype(jnp.float32)
+    k = max(1, int(round(w.shape[0] * (1.0 - sparsity))))
+    kth = -jnp.sort(-metric, axis=0)[k - 1]  # per-column threshold
+    return metric >= kth[None, :]
+
+
+def prune_ffn_wanda(
+    ffn_params: Dict, x_norm: jax.Array, z_norm: jax.Array, sparsity: float
+) -> Dict:
+    """Apply Wanda masks to every FF matrix.
+
+    x_norm: [D] L2 norms of prompt inputs to FF1;
+    z_norm: [F] L2 norms of prompt activations (inputs to FF2).
+    """
+    out = dict(ffn_params)
+    out["w1"] = ffn_params["w1"] * wanda_mask(ffn_params["w1"], x_norm, sparsity).astype(
+        ffn_params["w1"].dtype
+    )
+    if "wg" in ffn_params:
+        out["wg"] = ffn_params["wg"] * wanda_mask(
+            ffn_params["wg"], x_norm, sparsity
+        ).astype(ffn_params["wg"].dtype)
+    out["w2"] = ffn_params["w2"] * wanda_mask(ffn_params["w2"], z_norm, sparsity).astype(
+        ffn_params["w2"].dtype
+    )
+    return out
+
+
+def activation_norms(x: jax.Array) -> jax.Array:
+    """L2 norm over all token positions. x: [B,S,D] -> [D]."""
+    xf = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+    return jnp.sqrt(jnp.sum(jnp.square(xf), axis=0))

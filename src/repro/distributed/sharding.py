@@ -1,0 +1,182 @@
+"""Logical-axis sharding rules (MaxText-style) and activation constraints.
+
+A *rule set* maps logical axis names (see ``repro.models.param``) to mesh
+axis names (or tuples of them, or None).  Layers call
+``constrain(x, ("batch", "seq", "embed"))`` at strategic points; when no
+rules/mesh are active (unit tests, single-device runs) this is a no-op.
+
+Resolution is **divisibility-aware**: a mesh axis that does not evenly
+divide the corresponding dimension is dropped (replicated) rather than
+erroring — e.g. smollm's 15 query heads on a 16-way ``model`` axis, or a
+``batch=1`` long-context decode on a 16-way ``data`` axis.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.param import ParamSpec, tree_map_specs
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, MeshAxes]
+
+_state = threading.local()
+
+
+def _current() -> Tuple[Optional[Mesh], Optional[Rules]]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Rules):
+    """Activate (mesh, rules) for logical constraints inside a jit trace."""
+    prev = _current()
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def active_rules() -> Tuple[Optional[Mesh], Optional[Rules]]:
+    return _current()
+
+
+def _mesh_size(mesh, name: str) -> int:
+    return dict(mesh.shape)[name]  # works for Mesh and AbstractMesh
+
+
+def spec_for(
+    axes: Sequence[Optional[str]],
+    rules: Rules,
+    mesh: Mesh,
+    dims: Optional[Sequence[int]] = None,
+) -> P:
+    """Resolve logical axes to a PartitionSpec under ``rules``.
+
+    * A mesh axis may appear only once in the spec (GSPMD requirement);
+      later conflicting occurrences are replicated.
+    * If ``dims`` is given, mesh axes whose size does not divide the
+      dimension are dropped.
+    """
+    used: set = set()
+    out = []
+    for i, ax in enumerate(axes):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            out.append(None)
+            continue
+        names = (m,) if isinstance(m, str) else tuple(m)
+        names = tuple(n for n in names if n not in used and n in mesh.axis_names)
+        if dims is not None:
+            kept = []
+            rem = dims[i]
+            for n in names:
+                sz = _mesh_size(mesh, n)
+                if rem % sz == 0:
+                    kept.append(n)
+                    rem //= sz
+            names = tuple(kept)
+        if not names:
+            out.append(None)
+            continue
+        used.update(names)
+        out.append(names[0] if len(names) == 1 else names)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_for(
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Rules,
+    dims: Optional[Sequence[int]] = None,
+) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes, rules, mesh, dims))
+
+
+def tree_shardings_from_specs(spec_tree: Any, mesh: Mesh, rules: Rules) -> Any:
+    """Map a ParamSpec tree to a NamedSharding tree (divisibility-aware)."""
+    return tree_map_specs(
+        lambda s: sharding_for(s.axes, mesh, rules, s.shape), spec_tree
+    )
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Apply a logical sharding constraint if rules are active, else no-op."""
+    mesh, rules = _current()
+    if mesh is None or rules is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"axes {axes} rank != array rank {x.ndim} ({x.shape})")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(axes, rules, mesh, x.shape))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rule policies
+# ---------------------------------------------------------------------------
+
+def make_rules(
+    *,
+    phase: str,  # "train" | "serve"
+    fsdp: bool = False,
+    seq_parallel: bool = False,
+    expert_2d: bool = False,
+    kv_seq_model: bool = False,
+    head_dim_fallback: bool = False,
+) -> Rules:
+    """Build a logical->mesh rule set.
+
+    fsdp:         shard the ``embed`` axis of weights over ``data``
+                  (ZeRO-3-ish; weights gathered per layer by GSPMD).
+    seq_parallel: shard boundary activations' ``seq`` over ``model``
+                  (sequence parallelism; GSPMD inserts AG/RS pairs).
+    expert_2d:    shard ``experts`` over (data, model)
+                  (deepseek: 256 experts == 16x16 mesh exactly).
+    kv_seq_model: additionally shard decode KV caches' sequence axis over
+                  ``model`` (flash-decode-style partial softmax) — used
+                  when the arch's kv_heads cannot occupy the model axis,
+                  so cache reads stay sharded instead of being gathered.
+    """
+    rules: Rules = {
+        "batch": ("pod", "data"),
+        "seq": ("model",) if seq_parallel else None,
+        "act_embed": None,
+        "embed": "data" if fsdp else None,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        # decode-only TP fallback: when an arch's (kv-)head count can't
+        # occupy the 16-way model axis (llava 56H/8KV), shard head_dim
+        # instead — weights stay distributed, scores psums are tiny at
+        # decode. (Divisibility-aware resolution: heads win when they fit.)
+        "head_dim": "model" if head_dim_fallback else None,
+        "vocab": "model",
+        "tok_vocab": None,  # untied embedding table rows: replicate
+        "lora": None,
+        "experts": ("data", "model") if expert_2d else "model",
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "lru": "model",
+        "conv": None,
+        "layers": None,
+        # decode KV cache sequence axis: context parallelism over data
+        # (and model, when kv-heads can't use it)
+        "kv_seq": ("data", "model") if kv_seq_model else "data",
+        "cap": None,
+        "window": ("data", "model") if kv_seq_model else "data",
+    }
+    return rules
+
+
+def describe(rules: Rules) -> str:
+    return ", ".join(f"{k}->{v}" for k, v in rules.items() if v)

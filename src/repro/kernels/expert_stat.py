@@ -1,0 +1,52 @@
+"""Fused GRIFFIN statistic kernel (eq. 6): streams activation tiles,
+accumulating s_sq[j] = sum_t z[t,j]^2 / ||z[t]||^2 without ever
+materializing the row-normalized Z-bar.
+
+Grid: one step per token tile; per-step VMEM = [TS, F] activation tile
++ the fp32 [F] accumulator.  For very wide FF (gemma3 21504) a 256-token
+tile is ~11 MB bf16 — within v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(z_ref, s_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    z = z_ref[...].astype(jnp.float32)  # [TS, F]
+    sq = jnp.square(z)
+    row = jnp.sum(sq, axis=1, keepdims=True)
+    inv = jnp.where(row > 0, 1.0 / row, 0.0)
+    s_ref[...] += jnp.sum(sq * inv, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def expert_stat(
+    z: jax.Array,  # [S, F]
+    *,
+    tile: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    S, F = z.shape
+    tile = min(tile, S)
+    pad = (-S) % tile
+    if pad:  # zero rows contribute 0 (inv guards 0-norm rows)
+        z = jnp.pad(z, ((0, pad), (0, 0)))
+    n = z.shape[0] // tile
+    return pl.pallas_call(
+        _kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((tile, F), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((F,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((F,), jnp.float32),
+        interpret=interpret,
+    )(z)

@@ -1,0 +1,69 @@
+"""Dense GLU FFN forward Pallas kernel (prefill/training hot path).
+
+Grid: (token tiles, FF tiles); the FF axis is the reduction for the
+down-projection, accumulated in an fp32 VMEM tile of y.  BlockSpecs keep
+each step's working set at [TS, D] + 3x[D or BF tiles] — MXU-aligned
+(tiles are multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import _act
+
+
+def _kernel(x_ref, wg_ref, w1_ref, w2_ref, y_ref, *, activation: str):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...]  # [TS, D]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)  # [TS, BF]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    z = (_act(activation)(g) * h).astype(x.dtype)
+    y_ref[...] += jnp.dot(z, w2_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ts", "bf", "activation", "interpret")
+)
+def glu_ffn(
+    x: jax.Array,  # [S, D]
+    wg: jax.Array,  # [D, F]
+    w1: jax.Array,  # [D, F]
+    w2: jax.Array,  # [F, D]
+    *,
+    ts: int = 256,
+    bf: int = 512,
+    activation: str = "swiglu",
+    interpret: bool = True,
+) -> jax.Array:
+    S, D = x.shape
+    F = wg.shape[1]
+    ts = min(ts, S)
+    bf = min(bf, F)
+    pad_s = (-S) % ts
+    if pad_s:
+        x = jnp.pad(x, ((0, pad_s), (0, 0)))
+    assert F % bf == 0, (F, bf)
+    grid = (x.shape[0] // ts, F // bf)
+    out = pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ts, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((D, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((D, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bf, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((ts, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], D), jnp.float32),
+        interpret=interpret,
+    )(x, wg, w1, w2)
+    return out[:S]

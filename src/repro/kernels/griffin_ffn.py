@@ -1,0 +1,87 @@
+"""Fused GRIFFIN decode-FFN Pallas kernel (the paper's generation-phase
+hot op, TPU-native).
+
+One kernel fuses: block-gather of the selected expert neurons' weights
+(scalar-prefetched block ids drive the BlockSpec index_maps, so only
+the selected ``k`` rows of Wg/W1/W2 are ever read from HBM — zero-copy
+pruning, no compacted weight duplicate), both up-projections, the GLU
+activation, and the down-projection accumulation.
+
+Layout: weights are stored neuron-row-major ([F, D]) so a block of
+neurons is a contiguous [BK, D] tile; BK defaults to 128 (MXU/lane
+aligned — the reason GRIFFIN-TPU selects neuron *blocks*, DESIGN.md #3).
+
+Grid: one step per selected block; fp32 VMEM accumulator for y.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import _act
+
+
+def _kernel(ids_ref, x_ref, wg_ref, w1_ref, w2_ref, y_ref, *, activation: str):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...]  # [B, D]
+    wg = wg_ref[...]  # [BK, D]
+    w1 = w1_ref[...]
+    w2 = w2_ref[...]
+    g = jax.lax.dot_general(
+        x, wg, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [B, BK]
+    h = jax.lax.dot_general(
+        x, w1, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    z = (_act(activation)(g) * h).astype(x.dtype)
+    y_ref[...] += jax.lax.dot_general(
+        z, w2, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "activation", "interpret"),
+)
+def griffin_ffn(
+    x: jax.Array,  # [B, D]
+    wg: jax.Array,  # [F, D]
+    w1: jax.Array,  # [F, D]
+    w2: jax.Array,  # [F, D]
+    block_ids: jax.Array,  # [nb] int32 selected blocks (sorted)
+    *,
+    block_size: int = 128,
+    activation: str = "swiglu",
+    interpret: bool = True,
+) -> jax.Array:
+    B, D = x.shape
+    F = wg.shape[0]
+    nb = block_ids.shape[0]
+    assert F % block_size == 0, (F, block_size)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((B, D), lambda i, ids: (0, 0)),
+            pl.BlockSpec((block_size, D), lambda i, ids: (ids[i], 0)),
+            pl.BlockSpec((block_size, D), lambda i, ids: (ids[i], 0)),
+            pl.BlockSpec((block_size, D), lambda i, ids: (ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((B, D), lambda i, ids: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+    )(block_ids, x, wg, w1, w2)

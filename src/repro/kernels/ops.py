@@ -1,0 +1,48 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET v5e and are validated against ``ref.py`` in interpret
+mode per the assignment).  On a real TPU backend the same calls compile
+to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.expert_stat import expert_stat as _expert_stat
+from repro.kernels.glu_ffn import glu_ffn as _glu_ffn
+from repro.kernels.griffin_ffn import griffin_ffn as _griffin_ffn
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def griffin_ffn_decode(x, wg, w1, w2, block_ids, *, block_size: int = 128,
+                       activation: str = "swiglu"):
+    """Zero-copy pruned decode FFN (see kernels/griffin_ffn.py)."""
+    return _griffin_ffn(
+        x, wg, w1, w2, block_ids, block_size=block_size,
+        activation=activation, interpret=not _on_tpu(),
+    )
+
+
+def griffin_stat(z):
+    """Fused eq. 6 statistic. z: [S, F] or [B, S, F]."""
+    if z.ndim == 3:
+        return jax.vmap(lambda zz: _expert_stat(zz, interpret=not _on_tpu()))(z)
+    return _expert_stat(z, interpret=not _on_tpu())
+
+
+def glu_ffn_forward(x, wg, w1, w2, *, activation: str = "swiglu"):
+    """Dense GLU FFN forward. x: [S, D]."""
+    return _glu_ffn(x, wg, w1, w2, activation=activation,
+                    interpret=not _on_tpu())
+
+
+# re-export oracles for tests
+griffin_ffn_ref = ref.griffin_ffn_ref
+expert_stat_ref = ref.expert_stat_ref
+glu_ffn_ref = ref.glu_ffn_ref

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (hypothesis sweeps assert
+kernel == oracle across shapes/dtypes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(name: str):
+    return {
+        "swiglu": jax.nn.silu,
+        "geglu": lambda x: jax.nn.gelu(x, approximate=True),
+        "reglu": jax.nn.relu,
+    }[name]
+
+
+def griffin_ffn_ref(
+    x: jax.Array,  # [B, D]
+    wg: jax.Array,  # [F, D] (neuron-rows)
+    w1: jax.Array,  # [F, D]
+    w2: jax.Array,  # [F, D]
+    block_ids: jax.Array,  # [nb] int32, block granularity
+    block_size: int,
+    activation: str = "swiglu",
+) -> jax.Array:
+    """GRIFFIN decode FFN: act(x Wg^T) * (x W1^T) @ W2 over selected
+    neuron blocks only.  Returns fp32 [B, D]."""
+    idx = (block_ids[:, None] * block_size
+           + jnp.arange(block_size, dtype=block_ids.dtype)[None, :]).reshape(-1)
+    wg_s = jnp.take(wg, idx, axis=0)
+    w1_s = jnp.take(w1, idx, axis=0)
+    w2_s = jnp.take(w2, idx, axis=0)
+    act = _act(activation)
+    g = x @ wg_s.T
+    h = x @ w1_s.T
+    z = act(g) * h
+    return (z @ w2_s).astype(jnp.float32)
+
+
+def expert_stat_ref(z: jax.Array) -> jax.Array:
+    """Eq. 6 squared statistic from activations z [S, F] -> s_sq [F] fp32."""
+    zf = z.astype(jnp.float32)
+    row = jnp.sum(jnp.square(zf), axis=-1, keepdims=True)
+    inv = jnp.where(row > 0, 1.0 / row, 0.0)
+    return jnp.sum(jnp.square(zf) * inv, axis=0)
+
+
+def glu_ffn_ref(x: jax.Array, wg: jax.Array, w1: jax.Array, w2: jax.Array,
+                activation: str = "swiglu") -> jax.Array:
+    """Dense GLU FFN forward. x [S, D]; wg/w1 [D, F]; w2 [F, D]."""
+    act = _act(activation)
+    z = act(x @ wg) * (x @ w1)
+    return (z @ w2).astype(jnp.float32)

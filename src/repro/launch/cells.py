@@ -1,0 +1,245 @@
+"""Cell construction for the multi-pod dry-run.
+
+A *cell* = (architecture x input shape x mesh): a jit-able step function
+plus abstract (ShapeDtypeStruct) inputs and their NamedShardings.  The
+same builders drive real execution in the launchers — the dry-run just
+stops at ``.lower().compile()``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.distributed import sharding as shlib
+from repro.launch.policies import CellPolicy
+from repro.models import decoder, param as param_lib
+from repro.serving import steps as steps_lib
+from repro.training import optimizer as opt_lib
+from repro.training.train_step import build_train_step
+
+
+@dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args: Tuple
+    in_shardings: Any
+    out_shardings: Any = None
+    donate_argnums: Tuple[int, ...] = ()
+    static_argnums: Tuple[int, ...] = ()
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _shard(mesh, rules, axes, dims) -> NamedSharding:
+    return shlib.sharding_for(axes, mesh, rules, dims)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _tree_replicated(tree, mesh):
+    return jax.tree.map(lambda _: _replicated(mesh), tree)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state spec derivation (shapes AND logical axes, so sharded
+# optimizer state is first-class in the dry-run's memory analysis)
+# ---------------------------------------------------------------------------
+
+def opt_state_shardings(opt_name: str, param_specs, mesh, rules, opt_state_abs):
+    """Build a sharding tree matching the optimizer-state structure."""
+    p_sh = shlib.tree_shardings_from_specs(param_specs, mesh, rules)
+
+    if opt_name in ("adamw", "sgdm"):
+        out = {"m": p_sh, "step": _replicated(mesh)}
+        if "v" in opt_state_abs:
+            out["v"] = p_sh
+        return out
+    if opt_name == "adam8bit":
+        from repro.training.optimizer import _qblock
+
+        def q_sh(spec: param_lib.ParamSpec):
+            # q: same shape/axes as param; s: last axis block-reduced
+            shape = spec.shape or (1,)
+            axes = spec.axes or (None,)
+            d = shape[-1]
+            s_shape = shape[:-1] + (d // _qblock(d),)
+            return {
+                "q": shlib.sharding_for(axes, mesh, rules, shape),
+                "s": shlib.sharding_for(axes[:-1] + (None,), mesh, rules, s_shape),
+            }
+        qtree = param_lib.tree_map_specs(q_sh, param_specs)
+        return {"m": qtree, "v": qtree, "step": _replicated(mesh)}
+    if opt_name == "adafactor":
+        def f_sh(spec: param_lib.ParamSpec):
+            if len(spec.shape) >= 2:
+                return {
+                    "r": shlib.sharding_for(spec.axes[:-1], mesh, rules,
+                                            spec.shape[:-1]),
+                    "c": shlib.sharding_for(
+                        spec.axes[:-2] + spec.axes[-1:], mesh, rules,
+                        spec.shape[:-2] + spec.shape[-1:],
+                    ),
+                }
+            return {"v": shlib.sharding_for(spec.axes, mesh, rules, spec.shape)}
+        return {
+            "f": param_lib.tree_map_specs(f_sh, param_specs),
+            "step": _replicated(mesh),
+        }
+    raise ValueError(opt_name)
+
+
+# ---------------------------------------------------------------------------
+# Batch / input specs
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    shards: Dict[str, Any] = {}
+    if cfg.family == "encoder":
+        specs["prefix_emb"] = _sds((B, S, cfg.d_model), cfg.dtype)
+        shards["prefix_emb"] = _shard(mesh, rules, ("batch", "seq", "act_embed"),
+                                      (B, S, cfg.d_model))
+        specs["targets"] = _sds((B, S), jnp.int32)
+        shards["targets"] = _shard(mesh, rules, ("batch", "seq"), (B, S))
+        return specs, shards
+    if cfg.family == "vlm":
+        Pn = cfg.num_prefix_embeddings
+        St = S - Pn
+        specs["prefix_emb"] = _sds((B, Pn, cfg.d_model), cfg.dtype)
+        shards["prefix_emb"] = _shard(mesh, rules, ("batch", "seq", "act_embed"),
+                                      (B, Pn, cfg.d_model))
+        specs["tokens"] = _sds((B, St), jnp.int32)
+        shards["tokens"] = _shard(mesh, rules, ("batch", "seq"), (B, St))
+        return specs, shards
+    specs["tokens"] = _sds((B, S), jnp.int32)
+    shards["tokens"] = _shard(mesh, rules, ("batch", "seq"), (B, S))
+    return specs, shards
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    specs, shards = train_batch_specs(cfg, shape, mesh, rules)
+    specs.pop("targets", None)
+    shards.pop("targets", None)
+    return specs, shards
+
+
+# ---------------------------------------------------------------------------
+# Cells
+# ---------------------------------------------------------------------------
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     pol: CellPolicy) -> Cell:
+    optimizer = opt_lib.get_optimizer(pol.optimizer, 3e-4)
+    step_fn = build_train_step(cfg, optimizer, accum_steps=pol.accum_steps)
+
+    p_specs = decoder.model_specs(cfg)
+    params_abs = param_lib.abstract_params(p_specs, cfg.dtype)
+    opt_abs = jax.eval_shape(optimizer.init, params_abs)
+    state_abs = {
+        "params": params_abs,
+        "opt": opt_abs,
+        "step": _sds((), jnp.int32),
+    }
+    p_sh = shlib.tree_shardings_from_specs(p_specs, mesh, pol.rules)
+    state_sh = {
+        "params": p_sh,
+        "opt": opt_state_shardings(pol.optimizer, p_specs, mesh, pol.rules, opt_abs),
+        "step": _replicated(mesh),
+    }
+    batch_abs, batch_sh = train_batch_specs(cfg, shape, mesh, pol.rules)
+
+    def fn(state, batch):
+        with shlib.axis_rules(mesh, pol.rules):
+            return step_fn(state, batch)
+
+    return Cell(
+        name=f"{cfg.name}:{shape.name}:train",
+        fn=fn,
+        args=(state_abs, batch_abs),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       pol: CellPolicy) -> Cell:
+    prefill = steps_lib.build_prefill_step(cfg, pol.griffin, q_chunk=pol.q_chunk)
+    p_specs = decoder.model_specs(cfg)
+    params_abs = param_lib.abstract_params(p_specs, cfg.dtype)
+    p_sh = shlib.tree_shardings_from_specs(p_specs, mesh, pol.rules)
+    in_abs, in_sh = prefill_input_specs(cfg, shape, mesh, pol.rules)
+
+    def fn(params, inputs):
+        with shlib.axis_rules(mesh, pol.rules):
+            return prefill(params, inputs.get("tokens"), inputs.get("prefix_emb"))
+
+    return Cell(
+        name=f"{cfg.name}:{shape.name}:prefill",
+        fn=fn,
+        args=(params_abs, in_abs),
+        in_shardings=(p_sh, in_sh),
+    )
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      pol: CellPolicy) -> Cell:
+    use_pruned = pol.griffin is not None
+    dec = steps_lib.build_decode_step(cfg, use_pruned)
+
+    p_specs = decoder.model_specs(cfg)
+    params_abs = param_lib.abstract_params(p_specs, cfg.dtype)
+    p_sh = shlib.tree_shardings_from_specs(p_specs, mesh, pol.rules)
+
+    B = shape.global_batch
+    c_specs = decoder.cache_specs(cfg, B, shape.seq_len)
+    cache_abs = param_lib.abstract_params(c_specs, cfg.dtype)
+    c_sh = shlib.tree_shardings_from_specs(c_specs, mesh, pol.rules)
+
+    if use_pruned:
+        pr_specs = decoder.pruned_ffn_specs(cfg, pol.griffin.sparsity)
+        pruned_abs = param_lib.abstract_params(pr_specs, cfg.dtype)
+        pr_sh = shlib.tree_shardings_from_specs(pr_specs, mesh, pol.rules)
+    else:
+        pruned_abs, pr_sh = {}, {}
+
+    token_abs = _sds((B, 1), jnp.int32)
+    token_sh = _shard(mesh, pol.rules, ("batch", "seq"), (B, 1))
+    pos_abs = _sds((), jnp.int32)
+    pos_sh = _replicated(mesh)
+
+    def fn(params, cache, pruned, token, pos):
+        with shlib.axis_rules(mesh, pol.rules):
+            return dec(params, cache, pruned, token, pos)
+
+    return Cell(
+        name=f"{cfg.name}:{shape.name}:decode"
+        + ("+griffin" if use_pruned else ""),
+        fn=fn,
+        args=(params_abs, cache_abs, pruned_abs, token_abs, pos_abs),
+        in_shardings=(p_sh, c_sh, pr_sh, token_sh, pos_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    )
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               pol: CellPolicy) -> Cell:
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, pol)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh, pol)
+    return build_decode_cell(cfg, shape, mesh, pol)

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+cell lowers AND compiles with coherent shardings, and extract the
+roofline terms from the compiled artifact.
+
+The two lines above MUST precede any jax import (jax locks the device
+count at first init) — this file is the only place they are set, so
+smoke tests / benchmarks keep seeing 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k --pods 2
+  PYTHONPATH=src python -m repro.launch.dryrun --all        # every runnable cell
+Artifacts: JSON per cell under --out (default artifacts/dryrun/).
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis import hlo as hlo_lib
+from repro.analysis import roofline as rl
+from repro.configs.registry import ASSIGNED_ARCHS, get_config
+from repro.configs.shapes import SHAPES, cell_supported
+from repro.launch import cells as cells_lib
+from repro.launch.mesh import make_production_mesh
+from repro.launch.policies import policy_for
+
+
+def _device_bytes(args, shardings) -> int:
+    """Per-device bytes of the abstract inputs under their shardings."""
+    total = 0
+
+    def add(a, s):
+        nonlocal total
+        if a is None:
+            return
+        shard_shape = s.shard_shape(a.shape) if s is not None else a.shape
+        n = 1
+        for d in shard_shape:
+            n *= d
+        total += n * a.dtype.itemsize
+
+    jax.tree.map(add, args, shardings,
+                 is_leaf=lambda x: x is None or hasattr(x, "shape"))
+    return total
+
+
+def run_cell(arch: str, shape_name: str, *, pods: int = 1, use_griffin: bool = True,
+             seq_parallel: bool = False, optimizer: str | None = None,
+             out_dir: str = "artifacts/dryrun", q_chunk: int | None = None,
+             tag: str = "", moe_group_limit: int = 0,
+             kv_int8: bool = False, pad_heads: bool = False,
+             griffin_sparsity: float = 0.5, fsdp: bool | None = None) -> dict:
+    cfg = get_config(arch)
+    if moe_group_limit:
+        cfg = cfg.replace(moe_group_limit=moe_group_limit)
+    if kv_int8:
+        cfg = cfg.replace(kv_cache_int8=True)
+    if pad_heads:
+        from repro.distributed.transforms import pad_attention_heads
+
+        cfg = pad_attention_heads(cfg, tp=16).replace(name=arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "pods": pods,
+        "griffin": bool(use_griffin and cfg.griffin and cfg.has_ffn
+                        and shape.kind != "train"),
+        "seq_parallel": seq_parallel, "tag": tag,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=pods == 2)
+    chips = mesh.devices.size
+    pol = policy_for(cfg, shape, seq_parallel=seq_parallel, optimizer=optimizer,
+                     use_griffin=use_griffin, griffin_sparsity=griffin_sparsity,
+                     fsdp=fsdp)
+    if q_chunk:
+        pol = cells_lib.CellPolicy(rules=pol.rules, optimizer=pol.optimizer,
+                                   accum_steps=pol.accum_steps, griffin=pol.griffin,
+                                   q_chunk=q_chunk)
+    rec["optimizer"] = pol.optimizer if shape.kind == "train" else None
+    rec["accum_steps"] = pol.accum_steps if shape.kind == "train" else None
+
+    t0 = time.time()
+    try:
+        cell = cells_lib.build_cell(cfg, shape, mesh, pol)
+        jf = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        )
+        lowered = jf.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    except Exception as e:  # a failing cell is a bug in our sharding config
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+        return rec
+
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "temp_size_in_bytes"):
+            v = getattr(ma, f, None)
+            if v is not None:
+                mem[f] = int(v)
+    except Exception as e:
+        mem["error"] = str(e)
+    mem["input_bytes_per_device"] = _device_bytes(cell.args, cell.in_shardings)
+
+    hlo_text = compiled.as_text()
+    coll = hlo_lib.collective_bytes(hlo_text, chips,
+                                    pod_size=256 if pods == 2 else 0)
+    mf = rl.model_flops(cfg, shape)
+    roof = rl.from_costs(flops, bytes_accessed, coll["bytes_total"],
+                         model_flops_total=mf, chips=chips)
+
+    rec.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=bytes_accessed,
+        collectives={k: v for k, v in coll.items()},
+        memory=mem,
+        model_flops_total=mf,
+        roofline=roof.as_dict(),
+        hlo_ops=hlo_lib.count_ops(hlo_text),
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS + ["tinylm", "lm100m"])
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--pods", type=int, default=1, choices=[1, 2])
+    ap.add_argument("--all", action="store_true",
+                    help="run every runnable (arch x shape) cell for this pod count")
+    ap.add_argument("--no-griffin", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--moe-group-limit", type=int, default=0)
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--pad-heads", action="store_true")
+    ap.add_argument("--griffin-sparsity", type=float, default=0.5)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            for shape_name in SHAPES:
+                cells.append((arch, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    n_err = 0
+    for arch, shape_name in cells:
+        rec = run_cell(
+            arch, shape_name, pods=args.pods,
+            use_griffin=not args.no_griffin,
+            seq_parallel=args.seq_parallel,
+            optimizer=args.optimizer,
+            q_chunk=args.q_chunk,
+            tag=args.tag,
+            moe_group_limit=args.moe_group_limit,
+            kv_int8=args.kv_int8,
+            pad_heads=args.pad_heads,
+            griffin_sparsity=args.griffin_sparsity,
+            fsdp=False if args.no_fsdp else None,
+        )
+        suffix = ("_" + args.tag) if args.tag else ""
+        name = f"{arch}_{shape_name}_p{args.pods}" \
+               + ("_nogriffin" if args.no_griffin else "") + suffix
+        (out_dir / f"{name}.json").write_text(json.dumps(rec, indent=1))
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" dominant={r['dominant']} bound={r['bound_s']:.3e}s"
+                     f" flops/chip={rec['flops_per_chip']:.3e}"
+                     f" coll={rec['collectives']['bytes_total']:.3e}B"
+                     f" lower={rec['lower_s']}s compile={rec['compile_s']}s")
+        elif status == "error":
+            n_err += 1
+            extra = " " + rec["error"][:300]
+        else:
+            extra = " " + rec["reason"]
+        print(f"[{status:7s}] {arch} x {shape_name} (pods={args.pods}){extra}",
+              flush=True)
+    if n_err:
+        raise SystemExit(f"{n_err} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Production training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --steps 50 --mesh host --batch 8 --seq 128
+
+Builds the mesh (production 16x16 / 2x16x16, or a small ``host`` mesh
+over local devices for smoke runs), applies the per-arch sharding
+policy, shards the train state, and runs the fault-tolerant loop
+(checkpoints, auto-resume, preemption, straggler monitoring).  On this
+CPU container use ``--mesh host`` with a tiny arch; on a real TPU pod
+``--mesh pod``/``--mesh 2pod`` with the full configs.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import ASSIGNED_ARCHS, get_config
+from repro.configs.shapes import ShapeConfig
+from repro.data.pipeline import ShardedLoader, SyntheticCorpus
+from repro.distributed import sharding as shlib
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.policies import policy_for
+from repro.models import decoder
+from repro.runtime.preemption import PreemptionGuard
+from repro.runtime.straggler import StragglerDetector
+from repro.training import optimizer as opt_lib
+from repro.training.schedule import warmup_cosine
+from repro.training.train_step import build_train_step, init_train_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinylm",
+                    choices=ASSIGNED_ARCHS + ["tinylm", "lm100m"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--mesh", default="host", choices=["host", "pod", "2pod"],
+                    help="host: local devices; pod: 16x16; 2pod: 2x16x16")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke or args.mesh == "host")
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    pol = policy_for(cfg, shape, optimizer=args.optimizer)
+    if args.mesh == "host":
+        n = jax.device_count()
+        mesh = make_host_mesh((1, n), ("data", "model")) if n > 1 else None
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "2pod")
+
+    sched = warmup_cosine(args.lr, max(args.steps // 10, 5), args.steps)
+    optimizer = opt_lib.get_optimizer(pol.optimizer, sched)
+    step_fn = build_train_step(cfg, optimizer, accum_steps=args.accum)
+    state = init_train_state(cfg, optimizer, jax.random.PRNGKey(0))
+
+    if mesh is not None:
+        p_specs = decoder.model_specs(cfg)
+        p_sh = shlib.tree_shardings_from_specs(p_specs, mesh, pol.rules)
+        state = {
+            "params": jax.device_put(state["params"], p_sh),
+            "opt": state["opt"],
+            "step": state["step"],
+        }
+
+        def fn(state, batch):
+            with shlib.axis_rules(mesh, pol.rules):
+                return step_fn(state, batch)
+
+        jitted = jax.jit(fn)
+    else:
+        jitted = jax.jit(step_fn)
+
+    corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
+    loader = ShardedLoader(corpus, batch=args.batch, seq_len=args.seq, seed=1)
+    mgr = CheckpointManager(args.ckpt_dir, interval=args.ckpt_every) \
+        if args.ckpt_dir else None
+    guard = PreemptionGuard()
+    straggler = StragglerDetector()
+
+    import time
+
+    start = 0
+    if mgr is not None and mgr.latest_step() is not None:
+        restored, start = mgr.restore_latest()
+        state = restored
+        print(f"[resume] step {start}")
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(loader).items()}
+        t0 = time.perf_counter()
+        state, metrics = jitted(state, batch)
+        dt = time.perf_counter() - t0
+        straggler.record(0, dt)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"({dt*1e3:.0f} ms)")
+        if mgr is not None:
+            mgr.save(step + 1, state)
+        if guard.preempted:
+            if mgr is not None:
+                mgr.save(step + 1, state, force=True)
+                mgr.wait()
+            print("[preempt] exiting cleanly")
+            break
+    loader.close()
+    if mgr is not None:
+        mgr.wait()
+
+
+if __name__ == "__main__":
+    main()

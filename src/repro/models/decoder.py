@@ -1,0 +1,687 @@
+"""Unified model assembly for every architecture family.
+
+The layer stack is planned into **segments**:
+
+* ``scan`` segments — homogeneous (or pattern-periodic) runs of layers
+  whose params are stacked on a leading ``layers`` axis and executed
+  with ``jax.lax.scan`` (keeps HLO size O(period), essential for 48-64
+  layer stacks compiled for 512 devices);
+* ``unroll`` segments — shape-heterogeneous leftovers (leading dense
+  layers of MoE stacks, pattern remainders).
+
+Pattern-periodic stacks (gemma3 5:1 local:global, recurrentgemma
+rec-rec-attn) scan over *periods*, with per-position params stacked
+separately, so each position keeps a static layer kind (no traced
+branching, no wasted FLOPs).
+
+Public API (all pure, jit-friendly; ``cfg`` static):
+
+    build_plan(cfg)                          -> SegmentPlan
+    model_specs(cfg)                         -> ParamSpec tree
+    init_params(cfg, rng)                    -> params
+    forward(params, cfg, tokens, ...)        -> logits, Aux
+    loss_fn(params, batch, cfg)              -> loss, metrics
+    cache_specs(cfg, batch, max_len)         -> ParamSpec tree (decode cache)
+    fill_cache_from_prefill(cfg, cache, aux) -> cache
+    decode_step(params, cfg, cache, token, pos, pruned=None) -> logits, cache
+    extract_ffn_tree(params, cfg)            -> tree of dense-FF params
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import param as param_lib
+from repro.models.common import (
+    apply_norm,
+    embed_lookup,
+    embed_specs,
+    head_specs,
+    lm_logits,
+    norm_specs,
+)
+from repro.models.layers import attention as attn_lib
+from repro.models.layers import ffn as ffn_lib
+from repro.models.layers import mla as mla_lib
+from repro.models.layers import moe as moe_lib
+from repro.models.layers import rglru as rglru_lib
+from repro.models.layers import ssm as ssm_lib
+from repro.models.param import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Stack planning
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LayerDesc:
+    mixer: str  # "attn" | "ssm" | "rec"
+    attn_kind: str  # "global" | "local" | ""
+    ffn: str  # "dense" | "moe" | "none"
+
+
+@dataclass(frozen=True)
+class Segment:
+    kind: str  # "scan" | "unroll"
+    descs: Tuple[LayerDesc, ...]  # per position (scan period) or per layer
+    n: int  # number of periods (scan) / layers (unroll == len(descs))
+
+
+def layer_descs(cfg) -> List[LayerDesc]:
+    descs = []
+    for li in range(cfg.num_layers):
+        mixer = cfg.layer_mixer_kind(li)
+        akind = cfg.attn_kind(li) if mixer == "attn" else ""
+        if cfg.num_experts and li >= cfg.num_dense_layers:
+            f = "moe"
+        elif cfg.d_ff > 0:
+            f = "dense"
+        else:
+            f = "none"
+        descs.append(LayerDesc(mixer, akind, f))
+    return descs
+
+
+def build_plan(cfg) -> List[Segment]:
+    descs = layer_descs(cfg)
+    L = cfg.num_layers
+    start = cfg.num_dense_layers if cfg.num_experts else 0
+    p = max(len(cfg.attn_pattern), 1)
+    if cfg.block_pattern:
+        p = max(p, len(cfg.block_pattern))
+    segments: List[Segment] = []
+    if start:
+        segments.append(Segment("unroll", tuple(descs[:start]), start))
+    n_scan = (L - start) // p
+    if n_scan > 0:
+        segments.append(Segment("scan", tuple(descs[start : start + p]), n_scan))
+    rem = descs[start + n_scan * p :]
+    if rem:
+        segments.append(Segment("unroll", tuple(rem), len(rem)))
+    return segments
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def _mixer_specs(cfg, desc: LayerDesc):
+    if desc.mixer == "attn":
+        return mla_lib.mla_specs(cfg) if cfg.use_mla else attn_lib.attn_specs(cfg)
+    if desc.mixer == "ssm":
+        return ssm_lib.ssm_specs(cfg)
+    return rglru_lib.rglru_specs(cfg)
+
+
+def layer_specs(cfg, desc: LayerDesc) -> Dict:
+    s: Dict[str, Any] = {
+        "mixer_norm": norm_specs(cfg),
+        "mixer": _mixer_specs(cfg, desc),
+    }
+    if desc.ffn == "dense":
+        s["ffn_norm"] = norm_specs(cfg)
+        s["ffn"] = ffn_lib.ffn_specs(cfg)
+    elif desc.ffn == "moe":
+        s["ffn_norm"] = norm_specs(cfg)
+        s["ffn"] = moe_lib.moe_specs(cfg)
+    return s
+
+
+def model_specs(cfg) -> Dict:
+    specs: Dict[str, Any] = {"embed": embed_specs(cfg)}
+    hs = head_specs(cfg)
+    if hs:
+        specs["head"] = hs
+    if cfg.frontend:
+        specs["frontend"] = {
+            "proj": ParamSpec((cfg.d_model, cfg.d_model), ("embed", "act_embed"))
+        }
+    for i, seg in enumerate(build_plan(cfg)):
+        if seg.kind == "scan":
+            specs[f"seg{i}"] = {
+                f"pos{j}": param_lib.stack_specs(layer_specs(cfg, d), seg.n)
+                for j, d in enumerate(seg.descs)
+            }
+        else:
+            specs[f"seg{i}"] = {
+                f"layer{j}": layer_specs(cfg, d) for j, d in enumerate(seg.descs)
+            }
+    specs["final_norm"] = norm_specs(cfg)
+    if cfg.mtp_depth:
+        # DeepSeek-style MTP module: shared embed/head, 1 extra block
+        mtp_desc = build_plan(cfg)[-1].descs[-1]
+        specs["mtp"] = {
+            "norm_h": norm_specs(cfg),
+            "norm_e": norm_specs(cfg),
+            "proj": ParamSpec((2 * cfg.d_model, cfg.d_model), (None, "embed")),
+            "layer": layer_specs(cfg, mtp_desc),
+        }
+    return specs
+
+
+def init_params(cfg, rng: jax.Array) -> Dict:
+    return param_lib.init_params(model_specs(cfg), rng, cfg.dtype)
+
+
+def abstract_params(cfg) -> Dict:
+    return param_lib.abstract_params(model_specs(cfg), cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Aux containers
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass
+class Aux:
+    """Per-forward side outputs, trees mirroring the segment structure."""
+    kv: Any = None  # raw per-layer cache material (prefill)
+    stats: Any = None  # GRIFFIN s_sq leaves [.., B, F]
+    moe_aux: Any = 0.0
+    x_norms: Any = None  # FF input norms (Adaptive Wanda baseline)
+    z_norms: Any = None
+
+
+# ---------------------------------------------------------------------------
+# Single-layer application (full sequence)
+# ---------------------------------------------------------------------------
+
+def _apply_layer(
+    lp: Dict,
+    desc: LayerDesc,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg,
+    collect_stats: bool,
+    q_chunk: int,
+    pruned_ffn: Optional[Dict] = None,
+    want_z: bool = False,
+):
+    h = apply_norm(lp["mixer_norm"], x, cfg)
+    if desc.mixer == "attn":
+        if cfg.use_mla:
+            y, kv = mla_lib.mla_forward(lp["mixer"], h, positions, cfg, q_chunk)
+            kv = {"ckv": kv[0], "kr": kv[1]}
+        else:
+            y, (k, v) = attn_lib.attn_forward(
+                lp["mixer"], h, positions, cfg, kind=desc.attn_kind, q_chunk=q_chunk
+            )
+            kv = {"k": k, "v": v}
+    elif desc.mixer == "ssm":
+        y, kv = ssm_lib.ssm_forward(lp["mixer"], h, cfg)
+    else:
+        y, kv = rglru_lib.rglru_forward(lp["mixer"], h, cfg)
+    x = x + y
+    x = constrain(x, ("batch", "seq", "act_embed"))
+
+    stats = None
+    aux = jnp.zeros((), jnp.float32)
+    if desc.ffn != "none":
+        h = apply_norm(lp["ffn_norm"], x, cfg)
+        if desc.ffn == "dense":
+            fp = pruned_ffn if pruned_ffn is not None else lp["ffn"]
+            y, stats = ffn_lib.ffn_forward(fp, h, cfg, collect_stats, want_z)
+        elif pruned_ffn is not None:
+            y = moe_lib.moe_decode(lp["ffn"], pruned_ffn, h, cfg)
+        else:
+            y, aux, stats = moe_lib.moe_forward(
+                lp["ffn"], h, cfg, collect_stats=collect_stats, want_z=want_z
+            )
+        x = x + y
+        x = constrain(x, ("batch", "seq", "act_embed"))
+    if stats is None:  # uniform pytree shape across scan positions
+        B, S = x.shape[0], x.shape[1]
+        stats = {
+            "s_sq": jnp.zeros((B, 0), jnp.float32),
+            "x_sq": jnp.zeros((0,), jnp.float32),
+            "z_sq": jnp.zeros((0,), jnp.float32),
+        }
+        if want_z:
+            stats["z"] = jnp.zeros((B, S, 0), x.dtype)
+    return x, kv, stats, aux
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(
+    params: Dict,
+    cfg,
+    tokens: Optional[jax.Array] = None,
+    prefix_emb: Optional[jax.Array] = None,
+    *,
+    collect_stats: bool = False,
+    want_kv: bool = False,
+    q_chunk: int = 1024,
+    remat: Optional[bool] = None,
+    logits_mode: str = "all",  # "all" | "last" | "none" (hidden states)
+    pruned: Optional[Dict] = None,
+    want_z: bool = False,
+) -> Tuple[jax.Array, Aux]:
+    """Full-sequence forward.
+
+    ``logits_mode="last"`` projects only the final position (prefill:
+    avoids a [B,S,V] tensor); ``"none"`` returns hidden states (train
+    loss uses chunked CE instead).  ``pruned``: GRIFFIN-compacted FF
+    tree — runs the *generation-phase* model over a full (teacher-
+    forced) sequence, used by the paper's evaluation protocol.
+    """
+    parts = []
+    if prefix_emb is not None:
+        pe = prefix_emb
+        if "frontend" in params:
+            pe = jnp.einsum("bpd,de->bpe", pe, params["frontend"]["proj"])
+        parts.append(pe.astype(jnp.dtype(cfg.dtype)))
+    if tokens is not None:
+        parts.append(embed_lookup(params["embed"], tokens, cfg))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = constrain(x, ("batch", "seq", "act_embed"))
+
+    use_remat = cfg.remat if remat is None else remat
+    plan = build_plan(cfg)
+    kv_tree: Dict[str, Any] = {}
+    stats_tree: Dict[str, Any] = {}
+    moe_aux = jnp.zeros((), jnp.float32)
+
+    for i, seg in enumerate(plan):
+        sp = params[f"seg{i}"]
+        seg_pruned = (pruned or {}).get(f"seg{i}")
+        if seg.kind == "unroll":
+            kv_seg, st_seg = {}, {}
+            for j, desc in enumerate(seg.descs):
+                pf = (seg_pruned or {}).get(f"layer{j}")
+                x, kv, s_sq, aux = _apply_layer(
+                    sp[f"layer{j}"], desc, x, positions, cfg, collect_stats,
+                    q_chunk, pf, want_z,
+                )
+                moe_aux = moe_aux + aux
+                if want_kv:
+                    kv_seg[f"layer{j}"] = kv
+                if collect_stats:
+                    st_seg[f"layer{j}"] = s_sq
+            kv_tree[f"seg{i}"] = kv_seg
+            stats_tree[f"seg{i}"] = st_seg
+        else:
+            def body(carry, xs, _descs=seg.descs,
+                     _has_pruned=seg_pruned is not None):
+                x_c, aux_c = carry
+                lp_all, pruned_all = xs
+                kv_out, st_out = {}, {}
+                for j, desc in enumerate(_descs):
+                    pf = pruned_all.get(f"pos{j}") if _has_pruned else None
+                    x_c, kv, s_sq, aux = _apply_layer(
+                        lp_all[f"pos{j}"], desc, x_c, positions, cfg,
+                        collect_stats, q_chunk, pf, want_z,
+                    )
+                    aux_c = aux_c + aux
+                    kv_out[f"pos{j}"] = kv if want_kv else {}
+                    st_out[f"pos{j}"] = s_sq if collect_stats else jnp.zeros(())
+                return (x_c, aux_c), (kv_out, st_out)
+
+            if use_remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable
+                )
+            (x, moe_aux), (kv_seg, st_seg) = jax.lax.scan(
+                body, (x, moe_aux), (sp, seg_pruned or {})
+            )
+            if want_kv:
+                kv_tree[f"seg{i}"] = kv_seg
+            if collect_stats:
+                stats_tree[f"seg{i}"] = st_seg
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    if logits_mode == "none":
+        out = x
+    elif logits_mode == "last":
+        out = lm_logits(params.get("head", {}), params["embed"], x[:, -1:], cfg)
+    else:
+        out = lm_logits(params.get("head", {}), params["embed"], x, cfg)
+    return out, Aux(
+        kv=kv_tree if want_kv else None,
+        stats=stats_tree if collect_stats else None,
+        moe_aux=moe_aux,
+    )
+
+
+def hidden_forward(
+    params: Dict, cfg, tokens=None, prefix_emb=None, *, q_chunk: int = 1024,
+    remat: Optional[bool] = None,
+) -> Tuple[jax.Array, Aux]:
+    """Final hidden states (pre-head)."""
+    return forward(
+        params, cfg, tokens, prefix_emb, q_chunk=q_chunk, remat=remat,
+        logits_mode="none",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy: never materializes [B,S,V] fp32 logits)
+# ---------------------------------------------------------------------------
+
+def _ce_chunk(x, params, targets, mask, cfg):
+    logits = lm_logits(params.get("head", {}), params["embed"], x, cfg)  # fp32
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def chunked_ce(
+    x: jax.Array, params: Dict, targets: jax.Array, mask: jax.Array, cfg,
+    chunk: int = 512,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,D]; targets/mask: [B,S]. Returns (sum nll, count)."""
+    B, S, D = x.shape
+    if S <= chunk:
+        return _ce_chunk(x, params, targets, mask, cfg)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        S += pad
+    n = S // chunk
+
+    def body(carry, inp):
+        xs, ts, ms = inp
+        nll, cnt = _ce_chunk(xs, params, ts, ms, cfg)
+        return (carry[0] + nll, carry[1] + cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        body,
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (
+            jnp.moveaxis(x.reshape(B, n, chunk, D), 1, 0),
+            jnp.moveaxis(targets.reshape(B, n, chunk), 1, 0),
+            jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0),
+        ),
+    )
+    return nll, cnt
+
+
+def loss_fn(params: Dict, batch: Dict, cfg) -> Tuple[jax.Array, Dict]:
+    """batch: {tokens [B,S], (prefix_emb), (targets), (mask)}.
+
+    For decoder LMs, targets default to next-token shift of ``tokens``;
+    encoders require explicit framewise targets.
+    """
+    prefix = batch.get("prefix_emb")
+    if cfg.family == "encoder":
+        x, aux = hidden_forward(params, cfg, prefix_emb=prefix)
+        targets = batch["targets"]
+        mask = batch.get("mask", jnp.ones(targets.shape, jnp.float32))
+        nll, cnt = chunked_ce(x, params, targets, mask, cfg)
+        loss = nll / jnp.maximum(cnt, 1.0)
+        return loss, {"ce": loss}
+
+    tokens = batch["tokens"]
+    x, aux = hidden_forward(params, cfg, tokens=tokens, prefix_emb=prefix)
+    P = 0 if prefix is None else prefix.shape[1]
+    x_text = x[:, P:]
+    targets = batch.get("targets")
+    if targets is None:
+        targets = tokens[:, 1:]
+        x_text = x_text[:, :-1]
+        mask = batch.get("mask", jnp.ones(targets.shape, jnp.float32))
+        mask = mask[:, : targets.shape[1]]
+    else:
+        mask = batch.get("mask", jnp.ones(targets.shape, jnp.float32))
+    nll, cnt = chunked_ce(x_text, params, targets, mask, cfg)
+    ce = nll / jnp.maximum(cnt, 1.0)
+    loss = ce + cfg.router_aux_coef * aux.moe_aux
+
+    metrics = {"ce": ce, "moe_aux": aux.moe_aux}
+    if cfg.mtp_depth and "mtp" in params:
+        mtp_loss = _mtp_loss(params, x, tokens, cfg)
+        loss = loss + 0.1 * mtp_loss
+        metrics["mtp"] = mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _mtp_loss(params: Dict, h: jax.Array, tokens: jax.Array, cfg) -> jax.Array:
+    """DeepSeek-V3 multi-token prediction: one extra block predicts t+2."""
+    mp = params["mtp"]
+    B, S, D = h.shape
+    # combine hidden state at t with embedding of token t+1
+    h_in = apply_norm(mp["norm_h"], h[:, : S - 2], cfg)
+    e_in = apply_norm(mp["norm_e"], embed_lookup(params["embed"], tokens[:, 1 : S - 1], cfg), cfg)
+    x = jnp.einsum("bsd,dk->bsk", jnp.concatenate([h_in, e_in], -1), mp["proj"])
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32), x.shape[:2])
+    desc = build_plan(cfg)[-1].descs[-1]
+    x, _, _, _ = _apply_layer(mp["layer"], desc, x, positions, cfg, False, 1024)
+    x = apply_norm(params["final_norm"], x, cfg)
+    targets = tokens[:, 2:]
+    mask = jnp.ones(targets.shape, jnp.float32)
+    nll, cnt = chunked_ce(x, params, targets, mask, cfg)
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache_specs(cfg, desc: LayerDesc, batch: int, max_len: int) -> Dict:
+    if desc.mixer == "attn":
+        if cfg.use_mla:
+            return mla_lib.mla_cache_specs(cfg, batch, max_len)
+        return attn_lib.init_cache_specs(cfg, desc.attn_kind, batch, max_len)
+    if desc.mixer == "ssm":
+        return ssm_lib.ssm_cache_specs(cfg, batch)
+    return rglru_lib.rglru_cache_specs(cfg, batch)
+
+
+def cache_specs(cfg, batch: int, max_len: int) -> Dict:
+    tree: Dict[str, Any] = {}
+    for i, seg in enumerate(build_plan(cfg)):
+        if seg.kind == "scan":
+            tree[f"seg{i}"] = {
+                f"pos{j}": param_lib.stack_specs(
+                    _layer_cache_specs(cfg, d, batch, max_len), seg.n
+                )
+                for j, d in enumerate(seg.descs)
+            }
+        else:
+            tree[f"seg{i}"] = {
+                f"layer{j}": _layer_cache_specs(cfg, d, batch, max_len)
+                for j, d in enumerate(seg.descs)
+            }
+    return tree
+
+
+def init_cache(cfg, batch: int, max_len: int) -> Dict:
+    return param_lib.init_params(
+        cache_specs(cfg, batch, max_len), jax.random.PRNGKey(0), cfg.dtype
+    )
+
+
+def fill_cache_from_prefill(cfg, cache: Dict, kv_tree: Dict) -> Dict:
+    """Scatter prefill K/V (and states) into decode cache buffers."""
+
+    def fill_one(desc: LayerDesc, cbuf: Dict, kv: Dict) -> Dict:
+        if desc.mixer == "attn":
+            if cfg.use_mla:
+                return mla_lib.mla_fill_cache(cbuf, kv["ckv"], kv["kr"])
+            return attn_lib.fill_cache(cbuf, kv["k"], kv["v"])
+        # ssm / rec: states transfer directly
+        return jax.tree.map(lambda dst, src: src.astype(dst.dtype), cbuf, kv)
+
+    out: Dict[str, Any] = {}
+    for i, seg in enumerate(build_plan(cfg)):
+        key = f"seg{i}"
+        seg_out = {}
+        for j, desc in enumerate(seg.descs):
+            if seg.kind == "scan":
+                seg_out[f"pos{j}"] = jax.vmap(
+                    lambda c, k, d=desc: fill_one(d, c, k)
+                )(cache[key][f"pos{j}"], kv_tree[key][f"pos{j}"])
+            else:
+                seg_out[f"layer{j}"] = fill_one(
+                    desc, cache[key][f"layer{j}"], kv_tree[key][f"layer{j}"]
+                )
+        out[key] = seg_out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def _apply_layer_decode(
+    lp: Dict,
+    desc: LayerDesc,
+    cache: Dict,
+    x: jax.Array,
+    pos: jax.Array,
+    cfg,
+    pruned_ffn: Optional[Dict],
+):
+    h = apply_norm(lp["mixer_norm"], x, cfg)
+    if desc.mixer == "attn":
+        if cfg.use_mla:
+            y, new_cache = mla_lib.mla_decode(lp["mixer"], cache, h, pos, cfg)
+        else:
+            y, new_cache = attn_lib.attn_decode(
+                lp["mixer"], cache, h, pos, cfg, kind=desc.attn_kind
+            )
+    elif desc.mixer == "ssm":
+        y, new_cache = ssm_lib.ssm_decode(lp["mixer"], cache, h, cfg)
+    else:
+        y, new_cache = rglru_lib.rglru_decode(lp["mixer"], cache, h, cfg)
+    x = x + y
+
+    if desc.ffn != "none":
+        h = apply_norm(lp["ffn_norm"], x, cfg)
+        if desc.ffn == "dense":
+            fp = pruned_ffn if pruned_ffn is not None else lp["ffn"]
+            y, _ = ffn_lib.ffn_forward(fp, h, cfg)
+        else:
+            y = moe_lib.moe_decode(lp["ffn"], pruned_ffn, h, cfg)
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(
+    params: Dict,
+    cfg,
+    cache: Dict,
+    token: jax.Array,
+    pos: jax.Array,
+    pruned: Optional[Dict] = None,
+) -> Tuple[jax.Array, Dict]:
+    """One generation step. token: [B,1] int32; pos: scalar int32.
+
+    ``pruned``: optional GRIFFIN-compacted FF tree (see
+    ``extract_ffn_tree`` / ``repro.core.griffin.compact_tree``); when
+    given, dense FF blocks (and MoE shared experts) use the expert
+    neurons only — the paper's generation phase.
+    """
+    x = embed_lookup(params["embed"], token, cfg)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    new_cache: Dict[str, Any] = {}
+    for i, seg in enumerate(build_plan(cfg)):
+        key = f"seg{i}"
+        sp = params[key]
+        seg_cache = cache[key]
+        seg_pruned = (pruned or {}).get(key)
+        if seg.kind == "unroll":
+            nc = {}
+            for j, desc in enumerate(seg.descs):
+                pf = (seg_pruned or {}).get(f"layer{j}")
+                x, c = _apply_layer_decode(
+                    sp[f"layer{j}"], desc, seg_cache[f"layer{j}"], x, pos, cfg, pf
+                )
+                nc[f"layer{j}"] = c
+            new_cache[key] = nc
+        else:
+            def body(x_c, xs, _descs=seg.descs, _has_pruned=seg_pruned is not None):
+                lp_all, cache_all, pruned_all = xs
+                nc_out = {}
+                for j, desc in enumerate(_descs):
+                    pf = pruned_all.get(f"pos{j}") if _has_pruned else None
+                    x_c, c = _apply_layer_decode(
+                        lp_all[f"pos{j}"], desc, cache_all[f"pos{j}"], x_c, pos,
+                        cfg, pf,
+                    )
+                    nc_out[f"pos{j}"] = c
+                return x_c, nc_out
+
+            x, nc = jax.lax.scan(body, x, (sp, seg_cache, seg_pruned or {}))
+            new_cache[key] = nc
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params.get("head", {}), params["embed"], x, cfg)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# GRIFFIN plumbing
+# ---------------------------------------------------------------------------
+
+def extract_ffn_tree(params: Dict, cfg) -> Dict:
+    """Subtree of every GRIFFIN-prunable FF block (dense FF / MoE shared),
+    mirroring the stats tree emitted by ``forward(collect_stats=True)``."""
+    out: Dict[str, Any] = {}
+    for i, seg in enumerate(build_plan(cfg)):
+        key = f"seg{i}"
+        seg_out = {}
+        for j, desc in enumerate(seg.descs):
+            name = f"pos{j}" if seg.kind == "scan" else f"layer{j}"
+            if desc.ffn == "dense":
+                seg_out[name] = params[key][name]["ffn"]
+            elif desc.ffn == "moe" and cfg.num_shared_experts:
+                seg_out[name] = params[key][name]["ffn"]["shared"]
+        out[key] = seg_out
+    return out
+
+
+def pruned_ffn_specs(cfg, sparsity: float) -> Dict:
+    """ParamSpec tree of the GRIFFIN-compacted decode FF blocks (for the
+    dry-run's abstract inputs), mirroring ``extract_ffn_tree``."""
+    out: Dict[str, Any] = {}
+    for i, seg in enumerate(build_plan(cfg)):
+        key = f"seg{i}"
+        seg_out = {}
+        for j, desc in enumerate(seg.descs):
+            name = f"pos{j}" if seg.kind == "scan" else f"layer{j}"
+            if desc.ffn == "dense":
+                F = cfg.d_ff
+            elif desc.ffn == "moe" and cfg.num_shared_experts:
+                F = cfg.moe_d_ff * cfg.num_shared_experts
+            else:
+                continue
+            k = max(1, int(round(F * (1.0 - sparsity))))
+            specs = ffn_lib.ffn_specs(cfg, d_ff=k)
+            if seg.kind == "scan":
+                specs = param_lib.stack_specs(specs, seg.n)
+            seg_out[name] = specs
+        out[key] = seg_out
+    return out
+
+
+def prune_stats_tree(stats: Dict, cfg) -> Dict:
+    """Drop the zero-width placeholder leaves (layers without dense FF)."""
+    out: Dict[str, Any] = {}
+    for i, seg in enumerate(build_plan(cfg)):
+        key = f"seg{i}"
+        if key not in stats:
+            continue
+        seg_out = {}
+        for j, desc in enumerate(seg.descs):
+            name = f"pos{j}" if seg.kind == "scan" else f"layer{j}"
+            has_ff = desc.ffn == "dense" or (
+                desc.ffn == "moe" and cfg.num_shared_experts
+            )
+            if has_ff and name in stats[key]:
+                seg_out[name] = stats[key][name]
+        out[key] = seg_out
+    return out

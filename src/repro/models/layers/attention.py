@@ -1,0 +1,305 @@
+"""GQA/MQA attention with exact chunked-causal prefill and ring-buffer
+sliding-window decode caches.
+
+Design notes (TPU adaptation):
+
+* Prefill/training attention is computed in **static query chunks**
+  (default 1024), unrolled at trace time.  Chunk ``i`` only reads keys
+  ``[k_start, (i+1)*chunk)`` with ``k_start`` floor-clamped by the sliding
+  window for local layers — so causal FLOPs are ~S^2/2 (not S^2) and
+  local-attention FLOPs are O(S*window), with *static* slice shapes
+  (no dynamic control flow in the HLO; plays well with GSPMD).
+* Local (sliding-window) layers cache only ``window`` KV entries in a
+  ring buffer — this is what keeps gemma3/recurrentgemma ``long_500k``
+  decode caches small.
+* All softmax math in fp32; matmuls stay in the activation dtype so the
+  MXU roofline terms reflect bf16.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models.common import apply_rope, rms_normalize
+from repro.models.param import ParamSpec
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg) -> Dict[str, ParamSpec]:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((D, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((D, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((D, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.use_bias:
+        specs["bq"] = ParamSpec((H, hd), ("heads", "head_dim"), init="zeros")
+        specs["bk"] = ParamSpec((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+        specs["bv"] = ParamSpec((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+        specs["bo"] = ParamSpec((D,), ("act_embed",), init="zeros")
+    if getattr(cfg, "qk_norm", False):
+        specs["q_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+        specs["k_norm"] = ParamSpec((hd,), ("head_dim",), init="ones")
+    return specs
+
+
+def _project_qkv(params, x, positions, cfg, use_rope: bool):
+    """x: [B,S,D] -> q [B,S,H,hd], k,v [B,S,KV,hd] (rope applied)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if "q_norm" in params:
+        q = rms_normalize(q) * params["q_norm"].astype(q.dtype)
+        k = rms_normalize(k) * params["k_norm"].astype(k.dtype)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _out_proj(params, ctx, cfg):
+    """ctx: [B,S,H,hd] -> [B,S,D]."""
+    y = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    if "bo" in params:
+        y = y + params["bo"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (pre-projected q/k/v)
+# ---------------------------------------------------------------------------
+
+def _grouped_scores(q, k):
+    """q: [B,Sq,KV,G,hd], k: [B,Sk,KV,hd] -> [B,KV,G,Sq,Sk] (fp32)."""
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k)
+    return s.astype(jnp.float32)
+
+
+def _attend(q, k, v, mask, scale):
+    """q [B,Sq,KV,G,hd]; k,v [B,Sk,KV,hd]; mask [Sq,Sk] or [B,1,1,Sq,Sk]."""
+    scores = _grouped_scores(q, k) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return ctx
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Exact attention over full sequences, chunked over queries.
+
+    q: [B,S,H,hd]; k,v: [B,Sk,KV,hd].  Returns [B,S,H,hd].
+    ``q_offset`` is the absolute position of q[.,0] relative to k[.,0].
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, KV, G, hd)
+
+    chunk = min(q_chunk, S)
+    if S % chunk != 0:  # pad to a multiple (rare: tiny smoke shapes)
+        pad = chunk - S % chunk
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    n_chunks = qg.shape[1] // chunk
+
+    outs = []
+    for i in range(n_chunks):
+        q_i = qg[:, i * chunk : (i + 1) * chunk]
+        q_lo = q_offset + i * chunk
+        q_hi = q_lo + chunk
+        if causal:
+            k_end = min(Sk, q_hi)
+            k_start = 0
+            if window:
+                k_start = max(0, q_lo - window)
+        else:
+            k_start, k_end = 0, Sk
+        k_i = k[:, k_start:k_end]
+        v_i = v[:, k_start:k_end]
+        qpos = q_lo + np.arange(chunk)[:, None]
+        kpos = k_start + np.arange(k_end - k_start)[None, :]
+        if causal:
+            m = kpos <= qpos
+            if window:
+                m &= kpos > qpos - window
+        else:
+            m = np.ones((chunk, k_end - k_start), bool)
+        mask = jnp.asarray(m)[None, None, None]
+        outs.append(_attend(q_i, k_i, v_i, mask, scale))
+    out = jnp.concatenate(outs, axis=1)[:, :S]
+    return out.reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def attn_forward(
+    params: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg,
+    kind: str = "global",
+    q_chunk: int = 1024,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Returns (out [B,S,D], (k, v) for cache construction)."""
+    use_rope = cfg.family != "encoder"
+    q, k, v = _project_qkv(params, x, positions, cfg, use_rope)
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    causal = cfg.is_causal
+    window = cfg.sliding_window if kind == "local" else 0
+    ctx = chunked_attention(q, k, v, causal=causal, window=window, q_chunk=q_chunk)
+    y = _out_proj(params, ctx, cfg)
+    return y, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode step against a cache
+# ---------------------------------------------------------------------------
+
+def cache_capacity(cfg, kind: str, max_len: int) -> int:
+    if kind == "local" and cfg.sliding_window:
+        return min(cfg.sliding_window, max_len)
+    return max_len
+
+
+def _kv_int8(cfg) -> bool:
+    return getattr(cfg, "kv_cache_int8", False)
+
+
+def quantize_kv(x: jax.Array):
+    """[...,hd] -> (int8 [...,hd], f32 scale [...,1]). Per-(token,head)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(x.astype(jnp.float32) / jnp.maximum(s, 1e-8)).astype(jnp.int8)
+    return q, s
+
+
+def dequantize_kv(q: jax.Array, s: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+def init_cache_specs(cfg, kind: str, batch: int, max_len: int) -> Dict[str, ParamSpec]:
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    C = cache_capacity(cfg, kind, max_len)
+    seq_ax = "window" if (kind == "local" and cfg.sliding_window) else "kv_seq"
+    axes = ("batch", seq_ax, "kv_heads", "head_dim")
+    if _kv_int8(cfg):
+        # beyond-paper: int8 KV cache — at long-context/large-batch decode
+        # the cache read dominates HBM traffic; int8 halves it (scales are
+        # 1/hd of the payload)
+        return {
+            "k": ParamSpec((batch, C, KV, hd), axes, init="zeros", dtype="int8"),
+            "v": ParamSpec((batch, C, KV, hd), axes, init="zeros", dtype="int8"),
+            "k_scale": ParamSpec((batch, C, KV, 1), axes, init="zeros",
+                                 dtype="float32"),
+            "v_scale": ParamSpec((batch, C, KV, 1), axes, init="zeros",
+                                 dtype="float32"),
+        }
+    return {
+        "k": ParamSpec((batch, C, KV, hd), axes, init="zeros"),
+        "v": ParamSpec((batch, C, KV, hd), axes, init="zeros"),
+    }
+
+
+def fill_cache(cache: Dict, k: jax.Array, v: jax.Array) -> Dict:
+    """Write prefill K/V [B,S,...] into a cache buffer (static shapes).
+
+    For ring (window) caches the last C entries land at slot ``pos % C``.
+    """
+    C = cache["k"].shape[1]
+    S = k.shape[1]
+    int8 = cache["k"].dtype == jnp.int8
+    entries = {"k": k, "v": v}
+    if int8:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        entries = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    out = {}
+    for name, val in entries.items():
+        buf = cache[name]
+        if S <= C:
+            out[name] = jax.lax.dynamic_update_slice_in_dim(buf, val, 0, axis=1)
+        else:
+            slots = np.arange(S - C, S) % C  # static permutation
+            out[name] = buf.at[:, slots].set(val[:, S - C :])
+    return out
+
+
+def attn_decode(
+    params: Dict,
+    cache: Dict,
+    x: jax.Array,
+    pos: jax.Array,
+    cfg,
+    kind: str = "global",
+) -> Tuple[jax.Array, Dict]:
+    """One decode step. x: [B,1,D]; pos: scalar int32 (tokens so far)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, positions, cfg, use_rope=True)
+
+    C = cache["k"].shape[1]
+    is_ring = bool(kind == "local" and cfg.sliding_window and C == cfg.sliding_window)
+    slot = (pos % C) if is_ring else jnp.minimum(pos, C - 1)
+    int8 = cache["k"].dtype == jnp.int8
+    new_cache = {}
+    if int8:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        for name, val in (("k", kq), ("v", vq), ("k_scale", ks), ("v_scale", vs)):
+            new_cache[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], val, slot, axis=1
+            )
+        k_cache = dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+        v_cache = dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache}
+
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    H = cfg.num_heads
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, 1, KV, G, hd)
+    scores = _grouped_scores(qg, k_cache) * scale  # [B,KV,G,1,C]
+
+    slots_idx = jnp.arange(C)
+    if is_ring:
+        # ring slot s holds global position: the latest p <= pos with p%C==s
+        n_valid = jnp.minimum(pos + 1, C)
+        age = (pos - slots_idx) % C  # 0 = newest
+        valid = age < n_valid
+    else:
+        valid = slots_idx <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v_cache.dtype), v_cache)
+    y = _out_proj(params, ctx.reshape(B, 1, H, hd), cfg)
+    return y, new_cache

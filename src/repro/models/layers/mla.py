@@ -1,0 +1,156 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Prefill/training uses the expanded form; decode uses the **absorbed**
+form against the compressed cache (c_kv [B,S,r] + shared rope key
+[B,S,dr]) — the per-step HBM traffic win that makes MLA decode-friendly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models.common import apply_rope, rms_normalize
+from repro.models.param import ParamSpec
+
+NEG_INF = -2.0e38
+
+
+def mla_specs(cfg) -> Dict[str, ParamSpec]:
+    D, H = cfg.d_model, cfg.num_heads
+    qr, r = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    specs = {
+        "w_dkv": ParamSpec((D, r), ("embed", "lora")),
+        "w_kr": ParamSpec((D, dr), ("embed", "head_dim")),
+        "kv_norm": ParamSpec((r,), ("lora",), init="ones"),
+        "w_uk": ParamSpec((r, H, dn), ("lora", "heads", "head_dim")),
+        "w_uv": ParamSpec((r, H, dv), ("lora", "heads", "head_dim")),
+        "wo": ParamSpec((H, dv, D), ("heads", "head_dim", "embed")),
+    }
+    if qr:
+        specs.update(
+            w_dq=ParamSpec((D, qr), ("embed", "lora")),
+            q_norm=ParamSpec((qr,), ("lora",), init="ones"),
+            w_uq=ParamSpec((qr, H, dn + dr), ("lora", "heads", "head_dim")),
+        )
+    else:
+        specs["w_q"] = ParamSpec((D, H, dn + dr), ("embed", "heads", "head_dim"))
+    return specs
+
+
+def _queries(params, x, positions, cfg):
+    """-> q_nope [B,S,H,dn], q_rope [B,S,H,dr]."""
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if "w_dq" in params:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"])
+        cq = rms_normalize(cq) * params["q_norm"].astype(x.dtype)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _compress_kv(params, x, positions, cfg):
+    """-> c_kv [B,S,r] (normalized), k_rope [B,S,dr] (rotated, shared)."""
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    ckv = rms_normalize(ckv) * params["kv_norm"].astype(x.dtype)
+    kr = jnp.einsum("bsd,dk->bsk", x, params["w_kr"])
+    kr = apply_rope(kr[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return ckv, kr
+
+
+def mla_forward(
+    params: Dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg,
+    q_chunk: int = 1024,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Expanded-form MLA for training/prefill. Returns (y, (ckv, kr))."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q_nope, q_rope = _queries(params, x, positions, cfg)
+    ckv, kr = _compress_kv(params, x, positions, cfg)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, params["w_uv"])
+    q_nope = constrain(q_nope, ("batch", "seq", "heads", "head_dim"))
+    k_nope = constrain(k_nope, ("batch", "seq", "heads", "head_dim"))
+
+    chunk = min(q_chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        q_nope = jnp.pad(q_nope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_rope = jnp.pad(q_rope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (S + pad) // chunk
+    outs = []
+    for i in range(n_chunks):
+        sl = slice(i * chunk, (i + 1) * chunk)
+        k_end = min(S, (i + 1) * chunk)
+        s_n = jnp.einsum("bqhk,bshk->bhqs", q_nope[:, sl], k_nope[:, :k_end])
+        s_r = jnp.einsum("bqhk,bsk->bhqs", q_rope[:, sl], kr[:, :k_end])
+        scores = (s_n + s_r).astype(jnp.float32) * scale
+        qpos = i * chunk + np.arange(chunk)[:, None]
+        kpos = np.arange(k_end)[None, :]
+        scores = jnp.where(jnp.asarray(kpos <= qpos)[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        outs.append(jnp.einsum("bhqs,bshk->bqhk", probs, v[:, :k_end]))
+    ctx = jnp.concatenate(outs, axis=1)[:, :S]  # [B,S,H,dv]
+    y = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    return y, (ckv, kr)
+
+
+def mla_cache_specs(cfg, batch: int, max_len: int) -> Dict[str, ParamSpec]:
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    return {
+        "ckv": ParamSpec((batch, max_len, r), ("batch", "kv_seq", "lora"), init="zeros"),
+        "kr": ParamSpec((batch, max_len, dr), ("batch", "kv_seq", "head_dim"), init="zeros"),
+    }
+
+
+def mla_fill_cache(cache: Dict, ckv: jax.Array, kr: jax.Array) -> Dict:
+    return {
+        "ckv": jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, 0, axis=1),
+        "kr": jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr, 0, axis=1),
+    }
+
+
+def mla_decode(
+    params: Dict,
+    cache: Dict,
+    x: jax.Array,
+    pos: jax.Array,
+    cfg,
+) -> Tuple[jax.Array, Dict]:
+    """Absorbed-form decode: scores/context live in the r-dim latent space."""
+    B = x.shape[0]
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(dn + dr)
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+
+    q_nope, q_rope = _queries(params, x, positions, cfg)  # [B,1,H,*]
+    ckv_new, kr_new = _compress_kv(params, x, positions, cfg)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new, pos, axis=1)
+
+    # absorb W_UK into the query: q_lat [B,1,H,r]
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, params["w_uk"])
+    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv)
+    s_rope = jnp.einsum("bqhk,bsk->bhqs", q_rope, kr)
+    scores = (s_lat + s_rope).astype(jnp.float32) * scale
+    valid = jnp.arange(ckv.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ckv)  # [B,1,H,r]
+    ctx = jnp.einsum("bqhr,rhk->bqhk", ctx_lat, params["w_uv"])  # [B,1,H,dv]
+    y = jnp.einsum("bqhk,hkd->bqd", ctx, params["wo"])  # [B,1,D]
+    return y, {"ckv": ckv, "kr": kr}

@@ -1,0 +1,224 @@
+"""Mamba-2 (SSD / state-space duality) mixer.
+
+Training/prefill uses the chunked SSD algorithm (matmul-heavy: the
+TPU-friendly formulation — intra-chunk quadratic attention-like block +
+inter-chunk linear state recurrence), decode is the O(1) recurrent
+update.  fp32 state math throughout.
+
+Layout follows the Mamba-2 reference: in_proj emits [z | x | B | C | dt],
+a causal depthwise conv runs over [x | B | C], heads of size P share
+B/C within ``ssm_ngroups`` groups.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.common import rms_normalize
+from repro.models.param import ParamSpec
+
+
+def _dims(cfg):
+    d_in = cfg.d_inner_ssm
+    H = cfg.ssm_nheads
+    P = cfg.ssm_head_dim
+    G = cfg.ssm_ngroups
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * G * N
+    return d_in, H, P, G, N, conv_dim
+
+
+def ssm_specs(cfg) -> Dict[str, ParamSpec]:
+    D = cfg.d_model
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    return {
+        "w_in": ParamSpec((D, 2 * d_in + 2 * G * N + H), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((cfg.conv_width, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamSpec((H,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), init="zeros"),
+        "norm": ParamSpec((d_in,), ("ssm_inner",), init="ones"),
+        "w_out": ParamSpec((d_in, D), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_in, H, P, G, N, _ = _dims(cfg)
+    z = proj[..., :d_in]
+    x = proj[..., d_in : 2 * d_in]
+    Bv = proj[..., 2 * d_in : 2 * d_in + G * N]
+    Cv = proj[..., 2 * d_in + G * N : 2 * d_in + 2 * G * N]
+    dt = proj[..., 2 * d_in + 2 * G * N :]
+    return z, x, Bv, Cv, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B,S,Cc]; w: [W,Cc]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):  # small static width (4)
+        out = out + xp[:, i : i + x.shape[1]] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: [..., Q] -> L [..., Q, Q]: L[i,j] = sum_{j<k<=i} dA[k], -inf above diag."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # [.., i, j] = cs_i - cs_j
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bv, Cv, init_state, chunk):
+    """Chunked SSD scan.
+
+    xh: [B,S,H,P]; dt: [B,S,H] (post-softplus); A: [H] (negative);
+    Bv, Cv: [B,S,G,N]; init_state: [B,H,P,N].
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).  fp32 internally.
+    """
+    Bt, S, H, P = xh.shape
+    G, N = Bv.shape[2], Bv.shape[3]
+    hpg = H // G
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bv = jnp.pad(Bv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cv = jnp.pad(Cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (S + pad) // Q
+
+    f32 = jnp.float32
+    xh = xh.astype(f32).reshape(Bt, nc, Q, H, P)
+    dt = dt.astype(f32).reshape(Bt, nc, Q, H)
+    Bv = Bv.astype(f32).reshape(Bt, nc, Q, G, N)
+    Cv = Cv.astype(f32).reshape(Bt, nc, Q, G, N)
+    dA = dt * A.astype(f32)  # [B,nc,Q,H]
+    dx = xh * dt[..., None]  # dt-weighted input
+
+    # ---- intra-chunk ("diagonal") term: quadratic within chunk ----------
+    L = jnp.exp(_segsum(jnp.swapaxes(dA, -1, -2)))  # [B,nc,H,Q,Q]
+    # scores[b,c,g,q,k] = C_q . B_k  (shared within group)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", Cv, Bv)
+    scores = scores[:, :, :, None].repeat(hpg, axis=3).reshape(
+        Bt, nc, H, Q, Q
+    )  # expand groups -> heads
+    y_diag = jnp.einsum("bchqk,bchqk,bckhp->bcqhp", scores, L, dx)
+
+    # ---- chunk-final local states ---------------------------------------
+    cums = jnp.cumsum(dA, axis=2)  # [B,nc,Q,H]
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)  # [B,nc,Q,H]
+    # broadcast group-shared B to heads: [B,nc,Q,H,N]
+    Bh = Bv[:, :, :, :, None].repeat(hpg, axis=4).reshape(Bt, nc, Q, H, N)
+    # state_c = sum_k B_k (decay_k dx_k)   -> [B,nc,H,P,N]
+    states = jnp.einsum("bckhn,bckh,bckhp->bchpn", Bh, decay_to_end, dx)
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(cums[:, :, -1, :])  # [B,nc,H]
+
+    def step(carry, inp):
+        st_local, dec = inp  # [B,H,P,N], [B,H]
+        new = carry * dec[..., None, None] + st_local
+        return new, carry  # emit the *incoming* state for this chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init_state.astype(f32),
+        (jnp.swapaxes(states, 0, 1), jnp.swapaxes(chunk_decay, 0, 1)),
+    )
+    prev_states = jnp.swapaxes(prev_states, 0, 1)  # [B,nc,H,P,N]
+
+    # ---- off-diagonal (cross-chunk) output term --------------------------
+    decay_from_start = jnp.exp(cums)  # [B,nc,Q,H]
+    Ch = Cv[:, :, :, :, None].repeat(hpg, axis=4).reshape(Bt, nc, Q, H, N)
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", Ch, decay_from_start, prev_states)
+
+    y = (y_diag + y_off).reshape(Bt, nc * Q, H, P)[:, : S]
+    return y, final_state
+
+
+def ssm_forward(
+    params: Dict, x: jax.Array, cfg, init_state=None
+) -> Tuple[jax.Array, Dict]:
+    """Full-sequence Mamba-2 mixer. x: [B,S,D] -> (y [B,S,D], cache)."""
+    B, S, D = x.shape
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xc, Bv, Cv, dt = _split_proj(proj, cfg)
+    xbc = jnp.concatenate([xc, Bv, Cv], axis=-1)
+    conv_tail = xbc[:, -(cfg.conv_width - 1):] if S >= cfg.conv_width - 1 else jnp.pad(
+        xbc, ((0, 0), (cfg.conv_width - 1 - S, 0), (0, 0))
+    )
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xc = xbc[..., :d_in].reshape(B, S, H, P)
+    Bv = xbc[..., d_in : d_in + G * N].reshape(B, S, G, N)
+    Cv = xbc[..., d_in + G * N :].reshape(B, S, G, N)
+    xc = constrain(xc, ("batch", "seq", "ssm_heads", None))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+    y, state = ssd_chunked(xc, dt, A, Bv, Cv, init_state, cfg.ssm_chunk)
+    y = y + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z)) * scale
+    y = rms_normalize(y * jax.nn.silu(z)) * params["norm"].astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    cache = {"state": state, "conv": conv_tail}
+    return out, cache
+
+
+def ssm_cache_specs(cfg, batch: int) -> Dict[str, ParamSpec]:
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    return {
+        "state": ParamSpec((batch, H, P, N),
+                           ("batch", "ssm_heads", None, "ssm_state"),
+                           init="zeros", dtype="float32"),
+        "conv": ParamSpec((batch, cfg.conv_width - 1, conv_dim),
+                          ("batch", "conv", "ssm_inner"), init="zeros"),
+    }
+
+
+def ssm_decode(
+    params: Dict, cache: Dict, x: jax.Array, cfg
+) -> Tuple[jax.Array, Dict]:
+    """Single-token recurrent update. x: [B,1,D]."""
+    B = x.shape[0]
+    d_in, H, P, G, N, conv_dim = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xc, Bv, Cv, dt = _split_proj(proj, cfg)
+    xbc_new = jnp.concatenate([xc, Bv, Cv], axis=-1)  # [B,1,conv_dim]
+
+    # conv window: cache["conv"] holds previous W-1 inputs
+    win = jnp.concatenate([cache["conv"].astype(x.dtype), xbc_new], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", win, params["conv_w"]) + params["conv_b"]
+    xbc = jax.nn.silu(conv_out)[:, None]  # [B,1,conv_dim]
+    new_conv = win[:, 1:]
+
+    xh = xbc[..., :d_in].reshape(B, H, P)
+    Bv = xbc[..., d_in : d_in + G * N].reshape(B, G, N)
+    Cv = xbc[..., d_in + G * N :].reshape(B, G, N)
+    hpg = H // G
+    Bh = Bv[:, :, None].repeat(hpg, 2).reshape(B, H, N)
+    Ch = Cv[:, :, None].repeat(hpg, 2).reshape(B, H, N)
+
+    f32 = jnp.float32
+    dt = jax.nn.softplus(dt.astype(f32)[:, 0] + params["dt_bias"].astype(f32))  # [B,H]
+    A = -jnp.exp(params["a_log"].astype(f32))
+    dA = jnp.exp(dt * A)  # [B,H]
+    state = cache["state"].astype(f32)
+    dx = xh.astype(f32) * dt[..., None]  # [B,H,P]
+    state = state * dA[..., None, None] + jnp.einsum("bhp,bhn->bhpn", dx, Bh.astype(f32))
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(f32))
+    y = y + xh.astype(f32) * params["d_skip"].astype(f32)[:, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_normalize(y * jax.nn.silu(z)) * params["norm"].astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,131 @@
+"""Parameter-spec system.
+
+Every layer declares its parameters as a tree of :class:`ParamSpec` —
+(shape, logical axes, init).  From the spec tree we derive:
+
+* materialized parameters (``init_params``) for tests / real training,
+* ``jax.ShapeDtypeStruct`` stand-ins (``abstract_params``) for the
+  multi-pod dry-run (no device allocation),
+* the logical-axes tree consumed by ``repro.distributed.sharding`` to
+  build ``NamedSharding`` trees.
+
+Logical axis names used across the codebase:
+  batch, seq, embed, mlp, heads, kv_heads, head_dim, vocab, experts,
+  lora, ssm_inner, ssm_state, ssm_heads, lru, conv, layers (scan axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | embed | small
+    scale: Optional[float] = None  # override init std
+    dtype: Optional[str] = None  # override model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree: Any) -> Any:
+    """Map ``fn`` over every ParamSpec leaf of a nested-dict tree."""
+    if is_spec(tree):
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: tree_map_specs(fn, v) for k, v in tree.items()}
+    raise TypeError(f"unexpected node in spec tree: {type(tree)}")
+
+
+def stack_specs(tree: Any, n: int) -> Any:
+    """Add a leading scan ("layers") axis of size ``n`` to every spec."""
+    def _stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(
+            shape=(n,) + s.shape,
+            axes=("layers",) + s.axes,
+            init=s.init,
+            scale=s.scale,
+            dtype=s.dtype,
+        )
+    return tree_map_specs(_stack, tree)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array, dtype: jnp.dtype) -> jax.Array:
+    dt = jnp.dtype(spec.dtype) if spec.dtype else dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "embed":
+        std = spec.scale or 1.0
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+    # fan-in scaled normal; the scan axis (if present, axes[0]=="layers")
+    # is excluded from fan-in.
+    shape = spec.shape
+    fan_shape = shape[1:] if spec.axes and spec.axes[0] == "layers" else shape
+    fan_in = fan_shape[0] if len(fan_shape) >= 2 else max(np.prod(fan_shape), 1)
+    if len(fan_shape) >= 3:  # e.g. [heads, head_dim, embed] out-proj
+        fan_in = int(np.prod(fan_shape[:-1]))
+    std = spec.scale if spec.scale is not None else float(fan_in) ** -0.5
+    if spec.init == "small":
+        std = 1e-2 * std
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+
+
+def init_params(spec_tree: Any, rng: jax.Array, dtype: str) -> Any:
+    """Materialize parameters (deterministic per-path fold_in keys)."""
+    dt = jnp.dtype(dtype)
+
+    def walk(tree: Any, path: Tuple[str, ...]) -> Any:
+        if is_spec(tree):
+            key = rng
+            for p in path:
+                key = jax.random.fold_in(key, _path_hash(p))
+            return _init_leaf(tree, key, dt)
+        return {k: walk(v, path + (k,)) for k, v in tree.items()}
+
+    return walk(spec_tree, ())
+
+
+def _path_hash(s: str) -> int:
+    h = 0
+    for ch in s:
+        h = (h * 131 + ord(ch)) % (2**31 - 1)
+    return h
+
+
+def abstract_params(spec_tree: Any, dtype: str) -> Any:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    dt = jnp.dtype(dtype)
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype) if s.dtype else dt),
+        spec_tree,
+    )
+
+
+def logical_axes(spec_tree: Any) -> Any:
+    """Tree of logical-axis tuples, mirroring the param tree."""
+    return tree_map_specs(lambda s: s.axes, spec_tree)
+
+
+def param_count(spec_tree: Any) -> int:
+    total = 0
+
+    def add(s: ParamSpec):
+        nonlocal total
+        total += int(np.prod(s.shape))
+
+    tree_map_specs(add, spec_tree)
+    return total

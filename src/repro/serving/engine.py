@@ -1,0 +1,224 @@
+"""Generation engine: prefill -> GRIFFIN select/compact -> pruned decode.
+
+Two serving modes:
+
+* ``GenerationEngine.generate`` — synchronized batch generation (all
+  sequences share a position counter; GRIFFIN selection aggregated over
+  the batch via eq. 7, exactly the paper's batched setting, Table 4).
+* ``ContinuousBatcher`` — slot-based continuous batching: requests of
+  different lengths join/leave a fixed-size batch; per-slot position
+  counters (vmapped decode), per-slot GRIFFIN expert sets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import griffin as griffin_lib
+from repro.models import decoder
+from repro.serving.sampling import SamplingConfig, sample
+
+
+class GenerationEngine:
+    """Batch generation with the paper's prompt->generation split."""
+
+    def __init__(
+        self,
+        cfg,
+        params: Dict,
+        gcfg: Optional[griffin_lib.GriffinConfig] = None,
+        max_len: int = 2048,
+        q_chunk: int = 512,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.gcfg = gcfg if (gcfg is not None and cfg.griffin and cfg.has_ffn) else None
+        self.max_len = max_len
+
+        def prefill(params, tokens):
+            logits, aux = decoder.forward(
+                params, cfg, tokens,
+                collect_stats=self.gcfg is not None,
+                want_kv=True, q_chunk=q_chunk, remat=False, logits_mode="last",
+            )
+            return logits[:, 0], aux
+
+        self._prefill = jax.jit(prefill)
+
+        def dec(params, cache, pruned, token, pos):
+            return decoder.decode_step(params, cfg, cache, token, pos, pruned)
+
+        self._decode = jax.jit(dec)
+
+    # -- GRIFFIN ----------------------------------------------------------
+    def select_and_compact(self, stats) -> Dict:
+        stats = decoder.prune_stats_tree(stats, self.cfg)
+        sel = griffin_lib.select_tree(stats, self.gcfg)
+        ffn_tree = decoder.extract_ffn_tree(self.params, self.cfg)
+        return griffin_lib.compact_tree(ffn_tree, sel)
+
+    # -- API ---------------------------------------------------------------
+    def generate(
+        self,
+        tokens: jax.Array,  # [B, S] prompt
+        steps: int,
+        sampling: SamplingConfig = SamplingConfig(),
+        rng: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Returns generated tokens [B, steps]."""
+        B, S = tokens.shape
+        assert S + steps <= self.max_len, (S, steps, self.max_len)
+        last_logits, aux = self._prefill(self.params, tokens)
+        pruned = self.select_and_compact(aux.stats) if self.gcfg else None
+        cache = decoder.init_cache(self.cfg, B, self.max_len)
+        cache = decoder.fill_cache_from_prefill(self.cfg, cache, aux.kv)
+
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        out = []
+        rng, k = jax.random.split(rng)
+        tok = sample(last_logits, k, sampling)[:, None]
+        out.append(tok)
+        pos = S
+        for _ in range(steps - 1):
+            logits, cache = self._decode(self.params, cache, pruned, tok,
+                                         jnp.int32(pos))
+            rng, k = jax.random.split(rng)
+            tok = sample(logits[:, 0], k, sampling)[:, None]
+            out.append(tok)
+            pos += 1
+        return jnp.concatenate(out, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new: int
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching with per-slot GRIFFIN expert sets.
+
+    A fixed batch of ``n_slots`` sequences decodes in lockstep; finished
+    slots are refilled by prefilling the next queued request (per-slot
+    cache insert).  Positions are per-slot (vmapped decode step).
+    """
+
+    def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 512,
+                 gcfg: Optional[griffin_lib.GriffinConfig] = None):
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.max_len = n_slots, max_len
+        self.gcfg = gcfg if (gcfg is not None and cfg.griffin and cfg.has_ffn) else None
+
+        # per-slot caches: leading slot axis over batch-1 caches; decode
+        # is vmapped over slots (per-slot position counters)
+        cache1 = decoder.init_cache(cfg, 1, max_len)
+        self.cache = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_slots,) + x.shape).copy(), cache1
+        )
+        self.pos = np.zeros(n_slots, np.int32)
+        self.active: List[Optional[Request]] = [None] * n_slots
+        self.queue: List[Request] = []
+        self.pruned: Optional[Dict] = None  # per-slot, built at first prefill
+
+        def prefill(params, tokens):
+            logits, aux = decoder.forward(
+                params, cfg, tokens, collect_stats=self.gcfg is not None,
+                want_kv=True, q_chunk=256, remat=False, logits_mode="last",
+            )
+            return logits[:, 0], aux
+
+        self._prefill = jax.jit(prefill)
+
+        def dec_one(params, cache, pruned, token, pos):
+            # single-sequence decode (batch axis of size 1 inside)
+            logits, new_cache = decoder.decode_step(
+                params, cfg, cache, token, pos, pruned
+            )
+            return logits, new_cache
+
+        # vmap over slots: cache/token/pos/pruned are per-slot
+        self._decode_slots = jax.jit(
+            jax.vmap(dec_one, in_axes=(None, 0, 0 if self.gcfg else None, 0, 0))
+        )
+
+    def submit(self, prompt: np.ndarray, max_new: int, rid: int):
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+
+    def _insert(self, slot: int, req: Request):
+        tokens = jnp.asarray(req.prompt)[None, :]
+        last_logits, aux = self._prefill(self.params, tokens)
+        cache1 = decoder.init_cache(self.cfg, 1, self.max_len)
+        cache1 = decoder.fill_cache_from_prefill(self.cfg, cache1, aux.kv)
+        # write slot
+        self.cache = jax.tree.map(
+            lambda buf, one: buf.at[slot].set(one), self.cache, cache1
+        )
+        if self.gcfg:
+            stats = decoder.prune_stats_tree(aux.stats, self.cfg)
+            sel = griffin_lib.select_tree(stats, self.gcfg)
+            ffn_tree = decoder.extract_ffn_tree(self.params, self.cfg)
+            pruned1 = griffin_lib.compact_tree(ffn_tree, sel)
+            if self.pruned is None:
+                self.pruned = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (self.n_slots,) + x.shape).copy(),
+                    pruned1,
+                )
+            else:
+                self.pruned = jax.tree.map(
+                    lambda buf, one: buf.at[slot].set(one), self.pruned, pruned1
+                )
+        tok = int(np.argmax(np.asarray(last_logits)[0]))
+        req.generated.append(tok)
+        self.active[slot] = req
+        self.pos[slot] = len(req.prompt)
+
+    def step(self) -> bool:
+        """One scheduler tick: refill free slots, one decode step.
+        Returns False when no work remains."""
+        for s in range(self.n_slots):
+            if self.active[s] is None and self.queue:
+                self._insert(s, self.queue.pop(0))
+        live = [s for s in range(self.n_slots) if self.active[s] is not None]
+        if not live:
+            return False
+        tokens = np.zeros((self.n_slots, 1, 1), np.int32)
+        for s in live:
+            tokens[s, 0, 0] = self.active[s].generated[-1]
+        logits, self.cache = self._decode_slots(
+            self.params,
+            self.cache,
+            self.pruned,
+            jnp.asarray(tokens),
+            jnp.asarray(self.pos),
+        )
+        logits = np.asarray(logits)  # [slots, 1, 1, V]
+        for s in live:
+            req = self.active[s]
+            tok = int(np.argmax(logits[s, 0, 0]))
+            req.generated.append(tok)
+            self.pos[s] += 1
+            if len(req.generated) >= req.max_new or self.pos[s] >= self.max_len - 1:
+                req.done = True
+                self.active[s] = None
+        return True
+
+    def run(self) -> Dict[int, List[int]]:
+        done: Dict[int, List[int]] = {}
+        all_reqs = list(self.queue)
+        while self.step():
+            pass
+        for r in all_reqs:
+            done[r.rid] = r.generated
+        return done

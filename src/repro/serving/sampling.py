@@ -1,0 +1,33 @@
+"""Token sampling: greedy / temperature / top-k / top-p (nucleus)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.0  # 0 => greedy
+    top_k: int = 0
+    top_p: float = 1.0
+
+
+def sample(logits: jax.Array, rng: Optional[jax.Array], sc: SamplingConfig) -> jax.Array:
+    """logits: [B, V] fp32 -> tokens [B] int32."""
+    if sc.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / sc.temperature
+    if sc.top_k:
+        kth = jnp.sort(logits, axis=-1)[:, -sc.top_k][:, None]
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    if sc.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < sc.top_p, axis=-1)  # first index past p
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
+        logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,57 @@
+"""Jit-able serving step functions: prefill (with GRIFFIN selection +
+compaction) and decode.  Used by both the serving engine and the
+multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import griffin as griffin_lib
+from repro.models import decoder
+
+
+def build_prefill_step(cfg, gcfg: Optional[griffin_lib.GriffinConfig],
+                       q_chunk: int = 1024) -> Callable:
+    """prefill_step(params, tokens, prefix_emb=None)
+    -> {last_logits, kv, pruned}.
+
+    Runs the full model over the prompt (paper: full FF blocks in the
+    prompt phase), collects the flocking statistic per FF layer, selects
+    expert neurons and compacts their weights for the generation phase.
+    """
+    use_griffin = gcfg is not None and cfg.griffin and cfg.has_ffn
+
+    def prefill_step(params: Dict, tokens=None, prefix_emb=None) -> Dict:
+        logits, aux = decoder.forward(
+            params, cfg, tokens, prefix_emb,
+            collect_stats=use_griffin,
+            want_kv=True,
+            q_chunk=q_chunk,
+            remat=False,
+            logits_mode="last",
+        )
+        out = {"last_logits": logits[:, 0], "kv": aux.kv, "pruned": {}}
+        if use_griffin:
+            stats = decoder.prune_stats_tree(aux.stats, cfg)
+            sel = griffin_lib.select_tree(stats, gcfg)
+            ffn_tree = decoder.extract_ffn_tree(params, cfg)
+            shards = gcfg.tp_shards if gcfg.per_shard_topk else 1
+            out["pruned"] = griffin_lib.compact_tree(ffn_tree, sel, shards=shards)
+        return out
+
+    return prefill_step
+
+
+def build_decode_step(cfg, use_pruned: bool) -> Callable:
+    """decode_step(params, cache, pruned, token, pos) -> (logits, cache)."""
+
+    def decode_step(params, cache, pruned, token, pos):
+        logits, cache = decoder.decode_step(
+            params, cfg, cache, token, pos, pruned if use_pruned else None
+        )
+        return logits, cache
+
+    return decode_step

@@ -1,0 +1,88 @@
+"""Training loop: data -> jitted step -> metrics, with checkpointing,
+preemption handling, straggler monitoring, and auto-resume.
+
+Used by ``examples/train_lm.py`` and the quality benchmarks (which need
+a *trained* small model to reproduce the paper's tables at CPU scale).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.models import decoder
+from repro.runtime.preemption import PreemptionGuard
+from repro.runtime.straggler import StragglerDetector
+from repro.training.optimizer import Optimizer
+from repro.training.train_step import build_train_step, init_train_state
+
+
+@dataclass
+class TrainResult:
+    state: Any
+    losses: list
+    steps_done: int
+    preempted: bool = False
+
+
+def train(
+    cfg,
+    optimizer: Optimizer,
+    loader: Iterable[Dict[str, np.ndarray]],
+    num_steps: int,
+    *,
+    seed: int = 0,
+    ckpt: Optional[CheckpointManager] = None,
+    guard: Optional[PreemptionGuard] = None,
+    log_every: int = 20,
+    accum_steps: int = 1,
+    state: Any = None,
+    log_fn: Callable[[str], None] = print,
+) -> TrainResult:
+    step_fn = jax.jit(build_train_step(cfg, optimizer, accum_steps=accum_steps))
+    straggler = StragglerDetector()
+
+    start_step = 0
+    if state is None:
+        if ckpt is not None and ckpt.latest_step() is not None:
+            restored, start_step = ckpt.restore_latest()
+            state = restored
+            log_fn(f"[resume] restored checkpoint at step {start_step}")
+        else:
+            state = init_train_state(cfg, optimizer, jax.random.PRNGKey(seed))
+
+    losses = []
+    preempted = False
+    it = iter(loader)
+    for step in range(start_step, num_steps):
+        batch = next(it)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if "tokens" in batch and batch["tokens"].shape[1] > 1:
+            # next-token LM: loss_fn shifts internally
+            pass
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        straggler.record(0, dt)
+        losses.append(loss)
+        if log_every and (step % log_every == 0 or step == num_steps - 1):
+            log_fn(f"step {step:5d} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+        if ckpt is not None:
+            ckpt.save(step + 1, state)
+        if guard is not None and guard.preempted:
+            if ckpt is not None:
+                ckpt.save(step + 1, state, force=True)
+                ckpt.wait()
+            log_fn(f"[preempt] checkpointed at step {step + 1}, exiting")
+            preempted = True
+            break
+    if ckpt is not None:
+        ckpt.wait()
+    return TrainResult(state=state, losses=losses, steps_done=len(losses),
+                       preempted=preempted)

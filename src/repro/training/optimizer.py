@@ -1,0 +1,297 @@
+"""Optimizers (pytree-based, optax-style interface, self-contained).
+
+* ``adamw``     — AdamW with fp32 state (master-precision moments).
+* ``adam8bit``  — AdamW with **blockwise int8-quantized moments**
+                  (~4 bytes/param of optimizer state instead of 8+):
+                  the trick that lets deepseek-671B training state fit a
+                  v5e-256/512 footprint (DESIGN.md section 6).
+* ``adafactor`` — factored second moments (rank-1) for matrices.
+* ``sgdm``      — SGD with momentum (baseline).
+
+Each factory returns ``Optimizer(init, update)``; ``update`` maps
+``(grads, state, params) -> (new_params, new_state)``.  Learning-rate
+schedules are passed as ``step -> lr`` callables (see ``schedule.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def _const(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(
+    lr: float | Schedule = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    sched = lr if callable(lr) else _const(lr)
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        step = state["step"] + 1
+        grads = clip_by_global_norm(grads, grad_clip)
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise int8 moment quantization
+# ---------------------------------------------------------------------------
+
+_QBLOCK = 256
+
+
+def _qblock(d: int) -> int:
+    """Block size along the last dim (shape-preserving quantization: the
+    int8 payload keeps the param's shape, so it shards under the SAME
+    logical axes as the param — first-class in the dry-run)."""
+    return _QBLOCK if d % _QBLOCK == 0 else d
+
+
+def _quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """fp32 [..., d] -> (int8 [..., d], fp32 scales [..., d/bs])."""
+    d = x.shape[-1] if x.ndim else 1
+    x = x.reshape(x.shape or (1,))
+    bs = _qblock(d)
+    xr = x.reshape(*x.shape[:-1], d // bs, bs)
+    scale = jnp.max(jnp.abs(xr), axis=-1) / 127.0  # [..., d/bs]
+    q = jnp.round(xr / jnp.maximum(scale[..., None], 1e-12)).astype(jnp.int8)
+    return q.reshape(x.shape), scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    shape = shape or (1,)
+    d = shape[-1]
+    bs = _qblock(d)
+    xr = q.astype(jnp.float32).reshape(*shape[:-1], d // bs, bs)
+    return (xr * scale[..., None]).reshape(shape)
+
+
+def adam8bit(
+    lr: float | Schedule = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    sched = lr if callable(lr) else _const(lr)
+
+    def q_init(p):
+        q, s = _quantize(jnp.zeros(p.shape, jnp.float32))
+        return {"q": q, "s": s}
+
+    def init(params):
+        return {
+            "m": jax.tree.map(q_init, params),
+            "v": jax.tree.map(q_init, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, step=None):
+        step = state["step"] + 1
+        grads = clip_by_global_norm(grads, grad_clip)
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mq, vq):
+            g = g.astype(jnp.float32)
+            m = b1 * _dequantize(mq["q"], mq["s"], p.shape) + (1 - b1) * g
+            # v is stored in sqrt-domain: halves the dynamic range so the
+            # int8 code doesn't crush small second moments to zero (which
+            # would explode the preconditioner)
+            v_prev = jnp.square(_dequantize(vq["q"], vq["s"], p.shape))
+            v = b2 * v_prev + (1 - b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+            nmq, nms = _quantize(m)
+            nvq, nvs = _quantize(jnp.sqrt(v))
+            return new_p, {"q": nmq, "s": nms}, {"q": nvq, "s": nvs}
+
+        out = jax.tree.map(
+            upd, params, grads, state["m"], state["v"],
+            is_leaf=lambda x: isinstance(x, jax.Array)
+            or (isinstance(x, dict) and set(x) == {"q", "s"}),
+        )
+        is_triple = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_triple)
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is_triple)
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is_triple)
+        return new_params, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments)
+# ---------------------------------------------------------------------------
+
+def adafactor(
+    lr: float | Schedule = 1e-2,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    sched = lr if callable(lr) else _const(lr)
+
+    def init_leaf(p):
+        if p.ndim >= 2:
+            return {
+                "r": jnp.zeros(p.shape[:-1], jnp.float32),
+                "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    def init(params):
+        return {
+            "f": jax.tree.map(init_leaf, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, step=None):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr_t = sched(step)
+
+        def upd(p, g, f):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                r = beta * f["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * f["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(r, axis=-1, keepdims=True), eps)
+                vhat = (
+                    r[..., :, None] * c[..., None, :] / denom[..., None]
+                )
+                u = g * jax.lax.rsqrt(vhat + eps)
+                nf = {"r": r, "c": c}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                nf = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = p.astype(jnp.float32) - lr_t * (
+                u + weight_decay * p.astype(jnp.float32)
+            )
+            return new_p.astype(p.dtype), nf
+
+        out = jax.tree.map(
+            upd, params, grads, state["f"],
+            is_leaf=lambda x: isinstance(x, jax.Array)
+            or (isinstance(x, dict) and (set(x) <= {"r", "c", "v"})),
+        )
+        is_pair = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+        new_f = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+        return new_params, {"f": new_f, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+def sgdm(lr: float | Schedule = 0.1, momentum: float = 0.9,
+         grad_clip: float = 0.0) -> Optimizer:
+    sched = lr if callable(lr) else _const(lr)
+
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, step=None):
+        step = state["step"] + 1
+        if grad_clip:
+            grads = clip_by_global_norm(grads, grad_clip)
+        lr_t = sched(step)
+
+        def upd(p, g, m):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), m
+
+        out = jax.tree.map(upd, params, grads, state["m"])
+        is_pair = lambda x: isinstance(x, tuple)
+        return (
+            jax.tree.map(lambda t: t[0], out, is_leaf=is_pair),
+            {"m": jax.tree.map(lambda t: t[1], out, is_leaf=is_pair), "step": step},
+        )
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Utilities
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(grads, max_norm: float):
+    if not max_norm:
+        return grads
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+    )
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    return {
+        "adamw": adamw,
+        "adam8bit": adam8bit,
+        "adafactor": adafactor,
+        "sgdm": sgdm,
+    }[name](lr, **kw)

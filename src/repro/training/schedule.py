@@ -1,0 +1,30 @@
+"""Learning-rate schedules (step -> lr callables)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return f
+
+
+def warmup_rsqrt(peak_lr: float, warmup_steps: int):
+    def f(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        decay = peak_lr * (warmup_steps ** 0.5) / jnp.sqrt(s)
+        return jnp.where(s < warmup_steps, warm, decay)
+
+    return f

@@ -1,0 +1,89 @@
+"""Train-step builder: microbatch gradient accumulation + remat +
+optimizer application, all inside one jit-able function.
+
+The returned ``train_step(state, batch)`` is what the launcher jits with
+``in_shardings`` from the sharding policy.  ``TrainState`` is a plain
+dict pytree (params / opt / step) so checkpointing and resharding treat
+it uniformly.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decoder
+from repro.training.optimizer import Optimizer
+
+
+def init_train_state(cfg, optimizer: Optimizer, rng: jax.Array) -> Dict:
+    params = decoder.init_params(cfg, rng)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg, optimizer: Optimizer) -> Dict:
+    """ShapeDtypeStruct train state (dry-run: no allocation)."""
+    params = decoder.abstract_params(cfg)
+    opt = jax.eval_shape(optimizer.init, params)
+    return {"params": params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def build_train_step(
+    cfg,
+    optimizer: Optimizer,
+    accum_steps: int = 1,
+    loss_fn: Optional[Callable] = None,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``accum_steps > 1`` scans over microbatches (sequential gradient
+    accumulation) — the activation-memory lever for the big configs.
+    """
+    loss_fn = loss_fn or decoder.loss_fn
+
+    def grads_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb, cfg
+        )
+        return grads, loss, metrics
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params = state["params"]
+        if accum_steps == 1:
+            grads, loss, metrics = grads_of(params, batch)
+        else:
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(accum_steps, B // accum_steps, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                g, l, _ = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(body, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            metrics = {}
+
+        new_params, new_opt = optimizer.update(grads, state["opt"], params)
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        out_metrics = {"loss": loss, **{k: v for k, v in (metrics or {}).items()}}
+        return new_state, out_metrics
+
+    return train_step

@@ -1,0 +1,15 @@
+import os
+
+# Tests run on the single host CPU device (the dry-run sets its own
+# device-count flag in its own subprocesses — never globally here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,98 @@
+"""Checkpoint roundtrip, rotation, atomicity, resume, preemption."""
+import json
+import os
+import threading
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {
+            "w": jax.random.normal(k, (8, 16), jnp.float32),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (16,),
+                                   ).astype(jnp.bfloat16),
+        },
+        "step": jnp.int32(7),
+    }
+
+
+def _assert_tree_equal(a, b):
+    la = jax.tree.leaves(a)
+    lb = jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x).astype(np.float32),
+                                      np.asarray(y).astype(np.float32))
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    checkpointer.save(tmp_path, 7, tree)
+    restored, step = checkpointer.restore(tmp_path)
+    assert step == 7
+    _assert_tree_equal(tree, restored)
+    # bf16 dtype survives
+    assert restored["params"]["b"].dtype == jnp.bfloat16
+
+
+def test_async_save(tmp_path):
+    tree = _tree(1)
+    t = checkpointer.save_async(tmp_path, 3, tree)
+    t.join()
+    restored, step = checkpointer.restore(tmp_path)
+    assert step == 3
+    _assert_tree_equal(tree, restored)
+
+
+def test_atomicity_no_partial_dirs(tmp_path):
+    checkpointer.save(tmp_path, 1, _tree())
+    # a stale tmp dir from a crashed writer must be invisible to restore
+    (tmp_path / "step_00000002.tmp").mkdir()
+    assert checkpointer.available_steps(tmp_path) == [1]
+
+
+def test_manager_rotation_and_resume(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), interval=2, keep=2, use_async=False)
+    for step in range(1, 9):
+        mgr.save(step, {"x": jnp.float32(step)})
+    steps = checkpointer.available_steps(str(tmp_path))
+    assert steps == [6, 8]
+    (restored, latest) = mgr.restore_latest()
+    assert latest == 8 and float(restored["x"]) == 8.0
+
+
+def test_preemption_checkpoints_and_stops(tmp_path):
+    from repro.configs.registry import get_config
+    from repro.data.pipeline import SyntheticCorpus, ShardedLoader
+    from repro.runtime.preemption import PreemptionGuard
+    from repro.training import optimizer as opt_lib
+    from repro.training.loop import train
+
+    cfg = get_config("tinylm").replace(num_layers=2, d_model=32, d_ff=64,
+                                       num_heads=2, num_kv_heads=1, head_dim=16)
+    loader = ShardedLoader(SyntheticCorpus(), batch=2, seq_len=32)
+    mgr = CheckpointManager(str(tmp_path), interval=1000, keep=2, use_async=False)
+    guard = PreemptionGuard(install_handlers=False)
+    guard.simulate()  # preempt immediately after first step
+    res = train(cfg, opt_lib.adamw(1e-3), loader, 50, ckpt=mgr, guard=guard,
+                log_every=0, log_fn=lambda s: None)
+    loader.close()
+    assert res.preempted and res.steps_done == 1
+    assert mgr.latest_step() == 1
+
+    # resume continues from the checkpoint
+    loader2 = ShardedLoader(SyntheticCorpus(), batch=2, seq_len=32)
+    res2 = train(cfg, opt_lib.adamw(1e-3), loader2, 3, ckpt=mgr,
+                 log_every=0, log_fn=lambda s: None)
+    loader2.close()
+    assert res2.steps_done == 2  # steps 1 -> 3
+    assert int(res2.state["step"]) == 3

@@ -1,0 +1,115 @@
+"""Prefill + step-by-step decode must equal the full teacher-forced
+forward for every architecture family (validates every cache type:
+global KV, sliding-window ring, MLA compressed, SSD state, RG-LRU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import decoder
+
+FAMS = [
+    ("yi-9b", {}),                     # dense GQA
+    ("gemma3-27b", {}),                # local/global pattern + ring cache
+    ("mamba2-1.3b", {}),               # SSD state
+    ("recurrentgemma-9b", {}),         # RG-LRU + local attn hybrid
+    ("deepseek-v3-671b", {"capacity_factor": 8.0}),  # MLA + MoE
+    ("moonshot-v1-16b-a3b", {"capacity_factor": 8.0}),
+    ("llava-next-34b", {}),            # vlm backbone (text-only decode)
+]
+
+
+@pytest.mark.parametrize("arch,over", FAMS)
+def test_decode_matches_forward(arch, over, rng):
+    cfg = get_config(arch, smoke=True)
+    if over:
+        cfg = cfg.replace(**over)
+    params = decoder.init_params(cfg, rng)
+    B, S, G = 2, 32, 5
+    toks = jax.random.randint(rng, (B, S + G), 0, cfg.vocab_size)
+
+    ref_logits, _ = decoder.forward(params, cfg, toks, remat=False)
+    logits_p, aux = decoder.forward(
+        params, cfg, toks[:, :S], want_kv=True, remat=False, logits_mode="last"
+    )
+    cache = decoder.init_cache(cfg, B, S + G)
+    cache = decoder.fill_cache_from_prefill(cfg, cache, aux.kv)
+
+    tol = 2e-4
+    assert float(jnp.max(jnp.abs(logits_p[:, 0] - ref_logits[:, S - 1]))) < tol
+    for t in range(G):
+        logits_d, cache = decoder.decode_step(
+            params, cfg, cache, toks[:, S + t : S + t + 1], jnp.int32(S + t)
+        )
+        err = float(jnp.max(jnp.abs(logits_d[:, 0] - ref_logits[:, S + t])))
+        assert err < tol, (arch, t, err)
+
+
+def test_ring_cache_wraps(rng):
+    """Sliding-window ring cache: decode far past the window stays exact."""
+    cfg = get_config("gemma3-27b", smoke=True).replace(
+        num_layers=6, sliding_window=8
+    )
+    params = decoder.init_params(cfg, rng)
+    B, S, G = 1, 16, 12  # generate well past window=8
+    toks = jax.random.randint(rng, (B, S + G), 0, cfg.vocab_size)
+    ref_logits, _ = decoder.forward(params, cfg, toks, remat=False)
+    _, aux = decoder.forward(params, cfg, toks[:, :S], want_kv=True, remat=False,
+                             logits_mode="last")
+    cache = decoder.init_cache(cfg, B, S + G)
+    cache = decoder.fill_cache_from_prefill(cfg, cache, aux.kv)
+    for t in range(G):
+        logits_d, cache = decoder.decode_step(
+            params, cfg, cache, toks[:, S + t : S + t + 1], jnp.int32(S + t)
+        )
+        err = float(jnp.max(jnp.abs(logits_d[:, 0] - ref_logits[:, S + t])))
+        assert err < 2e-4, (t, err)
+
+
+def test_griffin_decode_full_k_matches(rng):
+    """decode with GRIFFIN-compacted FF at sparsity 0 == full decode."""
+    from repro.core import GriffinConfig, select_tree, compact_tree
+
+    cfg = get_config("yi-9b", smoke=True)
+    params = decoder.init_params(cfg, rng)
+    B, S = 2, 24
+    toks = jax.random.randint(rng, (B, S + 1), 0, cfg.vocab_size)
+    _, aux = decoder.forward(params, cfg, toks[:, :S], want_kv=True,
+                             collect_stats=True, remat=False, logits_mode="last")
+    stats = decoder.prune_stats_tree(aux.stats, cfg)
+    gcfg = GriffinConfig(sparsity=0.0, per_shard_topk=False)
+    pruned = compact_tree(decoder.extract_ffn_tree(params, cfg),
+                          select_tree(stats, gcfg))
+    cache = decoder.init_cache(cfg, B, S + 1)
+    cache = decoder.fill_cache_from_prefill(cfg, cache, aux.kv)
+    l_full, _ = decoder.decode_step(params, cfg, cache, toks[:, S:], jnp.int32(S))
+    l_pruned, _ = decoder.decode_step(params, cfg, cache, toks[:, S:],
+                                      jnp.int32(S), pruned)
+    assert float(jnp.max(jnp.abs(l_full - l_pruned))) < 1e-5
+
+
+def test_int8_kv_cache_close_to_fp(rng):
+    """int8 KV cache decode stays within quantization tolerance of the
+    fp-cache decode (beyond-paper optimization, attention caches only)."""
+    cfg = get_config("yi-9b", smoke=True)
+    cfg8 = cfg.replace(kv_cache_int8=True)
+    params = decoder.init_params(cfg, rng)
+    B, S, G = 2, 24, 4
+    toks = jax.random.randint(rng, (B, S + G), 0, cfg.vocab_size)
+    _, aux = decoder.forward(params, cfg, toks[:, :S], want_kv=True,
+                             remat=False, logits_mode="last")
+    cache_fp = decoder.fill_cache_from_prefill(
+        cfg, decoder.init_cache(cfg, B, S + G), aux.kv)
+    cache_q = decoder.fill_cache_from_prefill(
+        cfg8, decoder.init_cache(cfg8, B, S + G), aux.kv)
+    for t in range(G):
+        tok = toks[:, S + t : S + t + 1]
+        l_fp, cache_fp = decoder.decode_step(params, cfg, cache_fp, tok,
+                                             jnp.int32(S + t))
+        l_q, cache_q = decoder.decode_step(params, cfg8, cache_q, tok,
+                                           jnp.int32(S + t))
+        p_fp = jax.nn.softmax(l_fp[:, 0], -1)
+        p_q = jax.nn.softmax(l_q[:, 0], -1)
+        # distribution-level closeness (int8 quantization tolerance)
+        tv = float(0.5 * jnp.max(jnp.sum(jnp.abs(p_fp - p_q), axis=-1)))
+        assert tv < 0.05, (t, tv)

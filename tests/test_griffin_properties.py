@@ -1,0 +1,150 @@
+"""Property-based tests of the GRIFFIN invariants (hypothesis)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import GriffinConfig, aggregate_stats, select_experts
+from repro.core import selector as sel
+from repro.core.griffin import compact
+from repro.models.layers import ffn as ffn_lib
+from repro.configs.registry import get_config
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("ci")
+
+CFG = get_config("tinylm")
+
+
+def _ffn_params(key, d, f, glu=True):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": jax.random.normal(ks[0], (d, f)) * 0.1,
+        "w2": jax.random.normal(ks[1], (f, d)) * 0.1,
+    }
+    if glu:
+        p["wg"] = jax.random.normal(ks[2], (d, f)) * 0.1
+    return p
+
+
+@given(seed=st.integers(0, 2**31 - 1), s=st.integers(2, 17), b=st.integers(1, 3))
+def test_full_k_is_identity(seed, s, b):
+    """k = D_FF => GRIFFIN output bit-equals the full FF block."""
+    key = jax.random.PRNGKey(seed)
+    d, f = 8, 32
+    p = _ffn_params(key, d, f)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, s, d))
+    y_full, stats = ffn_lib.ffn_forward(p, x, CFG, collect_stats=True)
+    idx = select_experts(stats["s_sq"], GriffinConfig(sparsity=0.0, per_shard_topk=False))
+    assert idx.shape == (f,)
+    y_pruned, _ = ffn_lib.ffn_forward(compact(p, idx), x, CFG)
+    np.testing.assert_array_equal(np.asarray(y_full), np.asarray(y_pruned))
+
+
+@given(seed=st.integers(0, 2**31 - 1), sparsity=st.sampled_from([0.25, 0.5, 0.75]))
+def test_pruned_equals_full_restricted(seed, sparsity):
+    """The compacted FF equals the full FF with non-experts zeroed."""
+    key = jax.random.PRNGKey(seed)
+    d, f = 8, 32
+    p = _ffn_params(key, d, f)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 5, d))
+    _, stats = ffn_lib.ffn_forward(p, x, CFG, collect_stats=True)
+    idx = select_experts(stats["s_sq"], GriffinConfig(sparsity=sparsity, per_shard_topk=False))
+    y_pruned, _ = ffn_lib.ffn_forward(compact(p, idx), x, CFG)
+    # manual restriction
+    z = ffn_lib.ffn_activations(p, x, CFG)
+    mask = jnp.zeros(f).at[idx].set(1.0)
+    y_manual = jnp.einsum("...f,fd->...d", z * mask, p["w2"])
+    np.testing.assert_allclose(np.asarray(y_pruned), np.asarray(y_manual),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_statistic_token_permutation_invariant(seed):
+    """s (eq. 6) sums over tokens => invariant to token order."""
+    key = jax.random.PRNGKey(seed)
+    z = jax.random.normal(key, (11, 16))
+    perm = jax.random.permutation(jax.random.fold_in(key, 1), 11)
+    s1 = ffn_lib.griffin_stat_sq(z[None])
+    s2 = ffn_lib.griffin_stat_sq(z[perm][None])
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1), k1=st.integers(1, 15))
+def test_topk_nesting(seed, k1):
+    """Top-k1 experts are a subset of top-k2 for k1 <= k2."""
+    s = jax.random.uniform(jax.random.PRNGKey(seed), (16,))
+    k2 = min(16, k1 + 4)
+    i1 = set(np.asarray(sel.select_topk(s, k1)).tolist())
+    i2 = set(np.asarray(sel.select_topk(s, k2)).tolist())
+    assert i1 <= i2
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_per_shard_topk_balanced(seed):
+    """Each TP shard contributes exactly k/shards experts."""
+    s = jax.random.uniform(jax.random.PRNGKey(seed), (64,))
+    idx = sel.select_topk_per_shard(s, 16, shards=4)
+    counts = np.histogram(np.asarray(idx), bins=4, range=(0, 64))[0]
+    assert (counts == 4).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_block_selection_aligned(seed):
+    s = jax.random.uniform(jax.random.PRNGKey(seed), (64,))
+    idx = np.asarray(sel.select_blocks(s, 32, block=16))
+    assert len(idx) == 32
+    assert (idx.reshape(2, 16) % 16 == np.arange(16)).all()
+
+
+def test_batch_aggregation_eq7():
+    """s-bar = sum_i s_i / sqrt(S_i) (eq. 7)."""
+    s_sq = jnp.asarray([[4.0, 1.0], [9.0, 16.0]])
+    lens = jnp.asarray([4.0, 9.0])
+    expect = jnp.asarray([2.0 / 2 + 3.0 / 3, 1.0 / 2 + 4.0 / 3])
+    got = aggregate_stats(s_sq, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect), rtol=1e-6)
+
+
+def test_sampling_selection_shapes():
+    s = jnp.arange(32.0) + 1.0
+    rng = jax.random.PRNGKey(0)
+    for mode in ("sampling", "topk_sampling"):
+        idx = select_experts(
+            s[None] ** 2, GriffinConfig(sparsity=0.5, mode=mode), rng=rng
+        )
+        arr = np.asarray(idx)
+        assert len(arr) == 16 and len(set(arr.tolist())) == 16
+
+
+def test_magnitude_statistic_glu():
+    p = {"w1": jnp.ones((4, 8)) * 2.0, "wg": jnp.ones((4, 8)) * 3.0,
+         "w2": jnp.ones((8, 4))}
+    m = sel.magnitude_statistic(p)
+    np.testing.assert_allclose(np.asarray(m), np.full(8, 4.0 * 6.0), rtol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sharded_compaction_matches_plain(seed):
+    """Shard-local take_along_axis compaction == plain take compaction
+    when the selection is per-shard balanced (the TP serving path)."""
+    key = jax.random.PRNGKey(seed)
+    d, f, shards = 8, 64, 4
+    p = _ffn_params(key, d, f)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (1, 6, d))
+    _, stats = ffn_lib.ffn_forward(p, x, CFG, collect_stats=True)
+    idx = select_experts(
+        stats["s_sq"],
+        GriffinConfig(sparsity=0.5, per_shard_topk=True, tp_shards=shards),
+    )
+    plain = compact(p, idx)
+    sharded = compact(p, idx, shards=shards)
+    for k in plain:
+        np.testing.assert_array_equal(np.asarray(plain[k]),
+                                      np.asarray(sharded[k]))

@@ -1,0 +1,114 @@
+"""Pallas kernel validation: sweep shapes/dtypes, assert_allclose against
+the pure-jnp oracles in ref.py (interpret mode on CPU)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from repro.kernels import ops
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=12,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("kernels")
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,D,F,BK,nsel", [
+    (1, 128, 512, 128, 2),
+    (4, 256, 1024, 128, 4),
+    (8, 128, 2048, 256, 3),
+])
+@pytest.mark.parametrize("act", ["swiglu", "geglu", "reglu"])
+def test_griffin_ffn_kernel(dtype, B, D, F, BK, nsel, act):
+    rng = np.random.default_rng(B * D + F)
+    x = jnp.asarray(rng.normal(size=(B, D)), dtype)
+    wg = jnp.asarray(rng.normal(size=(F, D)) * 0.05, dtype)
+    w1 = jnp.asarray(rng.normal(size=(F, D)) * 0.05, dtype)
+    w2 = jnp.asarray(rng.normal(size=(F, D)) * 0.05, dtype)
+    ids = jnp.asarray(
+        np.sort(rng.choice(F // BK, size=nsel, replace=False)), jnp.int32
+    )
+    y = ops.griffin_ffn_decode(x, wg, w1, w2, ids, block_size=BK, activation=act)
+    y_ref = ops.griffin_ffn_ref(x, wg, w1, w2, ids, BK, activation=act)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), **_tol(dtype))
+
+
+@given(
+    s=st.integers(1, 300),
+    f=st.sampled_from([128, 384, 1024]),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 1000),
+)
+def test_expert_stat_kernel(s, f, dt, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(s, f)), dt)
+    got = ops.griffin_stat(z)
+    ref = ops.expert_stat_ref(z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-2,
+                               atol=2e-2)
+
+
+def test_expert_stat_batched():
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(size=(3, 70, 256)), jnp.float32)
+    got = ops.griffin_stat(z)
+    ref = jax.vmap(ops.expert_stat_ref)(z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("S,D,F", [(64, 128, 512), (300, 256, 1024)])
+def test_glu_ffn_kernel(dtype, S, D, F):
+    rng = np.random.default_rng(S + D)
+    x = jnp.asarray(rng.normal(size=(S, D)), dtype)
+    wg = jnp.asarray(rng.normal(size=(D, F)) * 0.05, dtype)
+    w1 = jnp.asarray(rng.normal(size=(D, F)) * 0.05, dtype)
+    w2 = jnp.asarray(rng.normal(size=(F, D)) * 0.05, dtype)
+    got = ops.glu_ffn_forward(x, wg, w1, w2)
+    ref = ops.glu_ffn_ref(x, wg, w1, w2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), **_tol(dtype))
+
+
+def test_griffin_kernel_matches_model_ffn():
+    """Kernel path == the model's compact()+ffn_forward path when the
+    selection is block-aligned (the TPU mode's contract)."""
+    from repro.configs.registry import get_config
+    from repro.core import GriffinConfig
+    from repro.core.selector import select_block_ids, select_blocks
+    from repro.models.layers import ffn as ffn_lib
+
+    cfg = get_config("tinylm")
+    key = jax.random.PRNGKey(3)
+    d, f, bk = 64, 512, 128
+    p = {
+        "w1": jax.random.normal(key, (d, f)) * 0.1,
+        "wg": jax.random.normal(jax.random.fold_in(key, 1), (d, f)) * 0.1,
+        "w2": jax.random.normal(jax.random.fold_in(key, 2), (f, d)) * 0.1,
+    }
+    x = jax.random.normal(jax.random.fold_in(key, 3), (2, 7, d))
+    _, stats = ffn_lib.ffn_forward(p, x, cfg, collect_stats=True)
+    s = jnp.sqrt(jnp.sum(stats["s_sq"], 0))
+    idx = select_blocks(s, f // 2, bk)
+    bids = select_block_ids(s, f // 2, bk)
+    y_model, _ = ffn_lib.ffn_forward(ffn_lib.compact_ffn_params(p, idx), x, cfg)
+    xq = x[:, -1]  # decode: one token
+    y_kernel = ops.griffin_ffn_decode(
+        xq, p["wg"].T, p["w1"].T, p["w2"], bids, block_size=bk
+    )
+    np.testing.assert_allclose(
+        np.asarray(y_kernel), np.asarray(y_model[:, -1]), rtol=1e-4, atol=1e-4
+    )

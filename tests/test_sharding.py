@@ -1,0 +1,69 @@
+"""Sharding-rule resolution unit tests (AbstractMesh — no devices)."""
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.distributed.sharding import make_rules, spec_for
+from repro.models.param import ParamSpec
+
+MESH1 = AbstractMesh((16, 16), ("data", "model"))
+MESH2 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_basic_resolution():
+    rules = make_rules(phase="train", fsdp=True)
+    s = spec_for(("embed", "mlp"), rules, MESH1, (4096, 11008))
+    assert s == P("data", "model")
+
+
+def test_divisibility_drops_axis():
+    rules = make_rules(phase="serve")
+    # smollm: 15 heads can't shard 16 ways -> replicated
+    s = spec_for(("embed", "heads", "head_dim"), rules, MESH1, (960, 15, 64))
+    assert s == P()
+    s = spec_for(("embed", "heads", "head_dim"), rules, MESH1, (4096, 32, 128))
+    assert s == P(None, "model")
+
+
+def test_axis_used_once():
+    rules = make_rules(phase="serve", fsdp=True)
+    # both embed->data; second occurrence must not reuse data
+    s = spec_for(("embed", "embed"), rules, MESH1, (1024, 1024))
+    assert s == P("data")
+
+
+def test_batch_one_drops_to_kv_seq():
+    rules = make_rules(phase="serve", kv_seq_model=True)
+    # long_500k: batch=1 can't shard -> cache seq takes data AND model
+    s = spec_for(("batch", "kv_seq", "kv_heads", "head_dim"), rules, MESH1,
+                 (1, 524288, 4, 128))
+    assert s == P(None, ("data", "model"))
+
+
+def test_batch_grabs_pod_and_data_multipod():
+    rules = make_rules(phase="train")
+    s = spec_for(("batch", "seq"), rules, MESH2, (256, 4096))
+    assert s == P(("pod", "data"))
+
+
+def test_expert_2d():
+    rules = make_rules(phase="train", expert_2d=True)
+    s = spec_for(("experts", "embed", "mlp"), rules, MESH1, (256, 7168, 2048))
+    assert s == P(("data", "model"))
+
+
+def test_pruned_ffn_divisible_for_all_griffin_archs():
+    """GRIFFIN k=50% widths must stay mlp-shardable on the 16-way TP axis."""
+    from repro.configs.registry import ASSIGNED_ARCHS, get_config
+
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        if not (cfg.griffin and cfg.has_ffn):
+            continue
+        widths = []
+        if cfg.d_ff:
+            widths.append(cfg.d_ff // 2)
+        if cfg.num_experts and cfg.num_shared_experts:
+            widths.append(cfg.moe_d_ff * cfg.num_shared_experts // 2)
+        for k in widths:
+            assert k % 16 == 0, (arch, k)
