@@ -285,6 +285,70 @@ def bench_kernels() -> None:
 
 
 # ---------------------------------------------------------------------------
+# Serving: paged-KV stack under a Poisson arrival trace (GRIFFIN on/off)
+# ---------------------------------------------------------------------------
+
+def bench_serving() -> None:
+    """16-request Poisson trace through the paged serving stack.
+
+    Requests arrive by wall clock (exponential inter-arrival times);
+    the server steps continuously — chunked prefill interleaved with the
+    decode batch — and the per-request telemetry yields tokens/sec and
+    p50/p95 TTFT, with per-request GRIFFIN on vs. off.
+
+    CPU caveat: per-slot compacted FF weights turn the decode FFN into
+    per-request einsums, which XLA:CPU runs slower than one shared dense
+    matmul despite half the FLOPs — the GRIFFIN win here is a TPU HBM-
+    bandwidth effect (each request reads k instead of F neuron rows; see
+    table3's derived v5e numbers and kernels/griffin_ffn.py).
+    """
+    from repro.data.pipeline import SyntheticCorpus
+    from repro.serving.server import PagedServer
+
+    cfg, params = trained_tiny()
+    corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
+    n_req, mean_gap_s = 16, 0.05
+    rng = np.random.default_rng(7)
+    trace = [
+        (
+            float(t),
+            corpus.sample(int(rng.integers(16, 80)), seed=4000 + i),
+            int(rng.integers(8, 32)),
+        )
+        for i, t in enumerate(np.cumsum(rng.exponential(mean_gap_s, n_req)))
+    ]
+
+    for gname, gcfg in (
+        ("full", None),
+        ("griffin50", GriffinConfig(sparsity=0.5, per_shard_topk=False)),
+    ):
+        srv = PagedServer(cfg, params, gcfg=gcfg, page_size=16, num_pages=64,
+                          n_slots=4, prefill_chunk=32, max_len=128)
+        t0 = time.perf_counter()
+        pending = list(trace)
+        rid = 0
+        while pending or srv.sched.has_work:
+            now = time.perf_counter() - t0
+            while pending and pending[0][0] <= now:
+                _, prompt, gen = pending.pop(0)
+                srv.submit(prompt, max_new=gen, rid=rid)
+                rid += 1
+            if not srv.step() and pending:
+                time.sleep(max(0.0, pending[0][0] - (time.perf_counter() - t0)))
+        dt = time.perf_counter() - t0
+        m = srv.metrics.summary()
+        emit(
+            f"serving_poisson_{gname}", dt * 1e6,
+            f"n={n_req} tok/s={m['tokens_per_sec']:.1f} "
+            f"ttft_p50={m['ttft_p50_s']:.3f}s ttft_p95={m['ttft_p95_s']:.3f}s "
+            f"tpot_p50={m['tpot_p50_s'] * 1e3:.1f}ms "
+            f"occupancy={m['pool_occupancy_mean']:.2f} "
+            f"preempt={m['preemptions']:.0f} "
+            f"decode_batch={m['decode_batch_mean']:.2f}",
+        )
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from dry-run artifacts
 # ---------------------------------------------------------------------------
 
@@ -320,6 +384,7 @@ BENCHES = {
     "table5": bench_table5_selection,
     "table3": bench_table3_latency,
     "kernels": bench_kernels,
+    "serving": bench_serving,
     "roofline": bench_roofline_table,
 }
 

@@ -1,10 +1,13 @@
-"""Batched serving with continuous batching + per-slot GRIFFIN.
+"""Paged-KV serving with chunked prefill + per-request GRIFFIN.
 
   PYTHONPATH=src python examples/serve_batched.py
 
-Submits a stream of requests with mixed prompt/generation lengths to a
-fixed-slot continuous batcher; each slot carries its own GRIFFIN expert
-set selected from its own prompt (the paper's adaptive property).
+Submits a stream of requests with mixed prompt/generation lengths to the
+paged serving stack (server -> scheduler -> block-table KV pools).  Each
+request streams its GRIFFIN statistic across prefill chunks and decodes
+with its own compacted expert set (the paper's adaptive property), while
+the scheduler interleaves prefill chunks into the running decode batch
+and preempts-by-eviction when the page pool runs dry.
 """
 import sys
 import time
@@ -18,30 +21,36 @@ import numpy as np
 from benchmarks.common import trained_tiny
 from repro.core import GriffinConfig
 from repro.data.pipeline import SyntheticCorpus
-from repro.serving.engine import ContinuousBatcher
+from repro.serving.server import PagedServer
 
 
 def main() -> None:
     cfg, params = trained_tiny()
     corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
 
-    cb = ContinuousBatcher(
-        cfg, params, n_slots=4, max_len=128,
+    srv = PagedServer(
+        cfg, params,
         gcfg=GriffinConfig(sparsity=0.5, per_shard_topk=False),
+        page_size=16, num_pages=48, n_slots=4, prefill_chunk=32, max_len=128,
     )
     rng = np.random.default_rng(0)
     n_req = 10
     for rid in range(n_req):
         plen = int(rng.integers(16, 64))
         gen = int(rng.integers(8, 24))
-        cb.submit(corpus.sample(plen, seed=1000 + rid), max_new=gen, rid=rid)
+        srv.submit(corpus.sample(plen, seed=1000 + rid), max_new=gen, rid=rid)
 
     t0 = time.perf_counter()
-    results = cb.run()
+    results = srv.drain()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(v) for v in results.values())
+    m = srv.metrics.summary()
     print(f"served {n_req} requests / {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s on 1 CPU core, 4 slots)")
+    print(f"  ttft p50={m['ttft_p50_s']:.3f}s p95={m['ttft_p95_s']:.3f}s  "
+          f"tpot p50={m['tpot_p50_s'] * 1e3:.1f}ms  "
+          f"pool occupancy={m['pool_occupancy_mean']:.0%}  "
+          f"preemptions={m['preemptions']:.0f}")
     for rid in sorted(results):
         print(f"  req {rid}: {len(results[rid])} tokens")
 

@@ -14,6 +14,7 @@ from repro.kernels import ref
 from repro.kernels.expert_stat import expert_stat as _expert_stat
 from repro.kernels.glu_ffn import glu_ffn as _glu_ffn
 from repro.kernels.griffin_ffn import griffin_ffn as _griffin_ffn
+from repro.kernels.paged_gather import paged_gather as _paged_gather
 
 
 def _on_tpu() -> bool:
@@ -42,7 +43,25 @@ def glu_ffn_forward(x, wg, w1, w2, *, activation: str = "swiglu"):
                     interpret=not _on_tpu())
 
 
+def paged_gather(pool, block_tables):
+    """Block-table page gather. pool [P, page, E]; bt [B, n] -> [B, n, page, E]."""
+    return _paged_gather(pool, jnp.clip(block_tables, 0),
+                         interpret=not _on_tpu())
+
+
+def paged_kv_gather(pool, block_tables):
+    """KV-shaped wrapper: pool [P, page, KV, hd] -> [B, n*page, KV, hd].
+
+    Flattens the (KV, hd) tail to one lane-aligned axis for the kernel.
+    """
+    P, page, KV, hd = pool.shape
+    B, n = block_tables.shape
+    out = paged_gather(pool.reshape(P, page, KV * hd), block_tables)
+    return out.reshape(B, n * page, KV, hd)
+
+
 # re-export oracles for tests
 griffin_ffn_ref = ref.griffin_ffn_ref
 expert_stat_ref = ref.expert_stat_ref
 glu_ffn_ref = ref.glu_ffn_ref
+paged_gather_ref = ref.paged_gather_ref

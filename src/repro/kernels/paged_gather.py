@@ -1,0 +1,55 @@
+"""Paged KV gather Pallas kernel (TPU-native block-table reads).
+
+The serving subsystem stores decode KV in a shared pool of fixed-size
+pages ([P+1, page, E] per layer, E = kv_heads * head_dim flattened for
+lane alignment); each request addresses its logical positions through a
+block table of page ids.  This kernel materializes the per-request
+contiguous KV view: grid (B, n_pages), with the *scalar-prefetched*
+block table driving the input BlockSpec index map — so each grid step
+DMAs exactly one page from HBM into VMEM and copies it to the output
+row.  Only pages a request actually owns are ever read (the pruning /
+paging analogue of the GRIFFIN zero-copy weight gather in
+``griffin_ffn.py``).
+
+Unallocated table entries must be clipped to a valid page id by the
+caller (the attention mask hides their contents downstream).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(bt_ref, pool_ref, out_ref):
+    out_ref[...] = pool_ref[...].reshape(out_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_gather(
+    pool: jax.Array,  # [P, page, E]
+    block_tables: jax.Array,  # [B, n] int32 page ids (pre-clipped to >= 0)
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns [B, n, page, E]: row (b, i) = pool[block_tables[b, i]]."""
+    P, page, E = pool.shape
+    B, n = block_tables.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, n),
+        in_specs=[
+            pl.BlockSpec((1, page, E), lambda b, i, bt: (bt[b, i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, page, E), lambda b, i, bt: (b, i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n, page, E), pool.dtype),
+        interpret=interpret,
+    )(block_tables, pool)

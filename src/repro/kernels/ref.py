@@ -51,3 +51,9 @@ def glu_ffn_ref(x: jax.Array, wg: jax.Array, w1: jax.Array, w2: jax.Array,
     act = _act(activation)
     z = act(x @ wg) * (x @ w1)
     return (z @ w2).astype(jnp.float32)
+
+
+def paged_gather_ref(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Block-table page gather. pool [P, page, E]; block_tables [B, n]
+    int32 (entries pre-clipped to >= 0) -> [B, n, page, E]."""
+    return jnp.take(pool, jnp.clip(block_tables, 0), axis=0)

@@ -109,6 +109,8 @@ def run_cell(arch: str, shape_name: str, *, pods: int = 1, use_griffin: bool = T
         return rec
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older JAX returns [dict] per device
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     bytes_accessed = float(cost.get("bytes accessed", 0.0))
 

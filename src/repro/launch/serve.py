@@ -1,5 +1,8 @@
 """Production serving launcher: prefill -> GRIFFIN select/compact ->
-pruned decode, with continuous batching.
+pruned decode, over the paged-KV serving stack (block-table cache +
+chunked-prefill scheduler; see serving/server.py).  Families the paged
+path doesn't cover (MLA / SSM / RG-LRU / MoE) fall back to the
+slot-broadcast ``ContinuousBatcher``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinylm \
       --requests 8 --sparsity 0.5
@@ -21,6 +24,7 @@ from repro.core import GriffinConfig
 from repro.data.pipeline import SyntheticCorpus
 from repro.models import decoder
 from repro.serving.engine import ContinuousBatcher
+from repro.serving.server import PagedServer
 
 
 def main() -> None:
@@ -30,6 +34,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=64)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--sparsity", type=float, default=0.5)
     ap.add_argument("--no-griffin", action="store_true")
     ap.add_argument("--ckpt-dir", default="artifacts/models/tinylm")
@@ -49,21 +56,44 @@ def main() -> None:
 
     gcfg = None if (args.no_griffin or not cfg.griffin or not cfg.has_ffn) \
         else GriffinConfig(sparsity=args.sparsity, per_shard_topk=False)
-    cb = ContinuousBatcher(cfg, params, n_slots=args.slots,
-                           max_len=args.max_len, gcfg=gcfg)
     corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
     rng = np.random.default_rng(0)
-    for rid in range(args.requests):
-        plen = int(rng.integers(16, args.max_len // 2))
-        cb.submit(corpus.sample(plen, seed=500 + rid),
-                  max_new=int(rng.integers(8, 32)), rid=rid)
+    reqs = [
+        (corpus.sample(int(rng.integers(16, args.max_len // 2)), seed=500 + rid),
+         int(rng.integers(8, 32)))
+        for rid in range(args.requests)
+    ]
 
+    mode = f"GRIFFIN@{args.sparsity:.0%}" if gcfg else "full model"
+    if decoder.supports_paged(cfg):
+        srv = PagedServer(
+            cfg, params, gcfg=gcfg, page_size=args.page_size,
+            num_pages=args.num_pages, n_slots=args.slots,
+            prefill_chunk=args.prefill_chunk, max_len=args.max_len,
+        )
+        for rid, (prompt, gen) in enumerate(reqs):
+            srv.submit(prompt, max_new=gen, rid=rid)
+        t0 = time.perf_counter()
+        results = srv.drain()
+        dt = time.perf_counter() - t0
+        total = sum(len(v) for v in results.values())
+        m = srv.metrics.summary()
+        print(f"[{mode}] paged: served {args.requests} requests / {total} "
+              f"tokens in {dt:.2f}s ({total/dt:.1f} tok/s, {args.slots} slots)")
+        print(f"  ttft p50={m['ttft_p50_s']:.3f}s p95={m['ttft_p95_s']:.3f}s "
+              f"occupancy={m['pool_occupancy_mean']:.0%} "
+              f"preemptions={m['preemptions']:.0f}")
+        return
+
+    cb = ContinuousBatcher(cfg, params, n_slots=args.slots,
+                           max_len=args.max_len, gcfg=gcfg)
+    for rid, (prompt, gen) in enumerate(reqs):
+        cb.submit(prompt, max_new=gen, rid=rid)
     t0 = time.perf_counter()
     results = cb.run()
     dt = time.perf_counter() - t0
     total = sum(len(v) for v in results.values())
-    mode = f"GRIFFIN@{args.sparsity:.0%}" if gcfg else "full model"
-    print(f"[{mode}] served {args.requests} requests / {total} tokens "
+    print(f"[{mode}] slots: served {args.requests} requests / {total} tokens "
           f"in {dt:.2f}s ({total/dt:.1f} tok/s, {args.slots} slots)")
 
 

@@ -624,6 +624,174 @@ def decode_step(
 
 
 # ---------------------------------------------------------------------------
+# Paged-KV serving path (block-table pools; see serving/paged.py)
+# ---------------------------------------------------------------------------
+
+def supports_paged(cfg) -> bool:
+    """The paged path covers the GQA/MQA attention families (dense FF or
+    no FF).  MLA / SSM / RG-LRU / MoE / int8-KV fall back to the
+    contiguous caches."""
+    return (
+        all(d.mixer == "attn" for d in layer_descs(cfg))
+        and not cfg.use_mla
+        and not cfg.num_experts
+        and not getattr(cfg, "kv_cache_int8", False)
+        and not cfg.frontend
+    )
+
+
+def paged_pool_specs(cfg, num_pages: int, page_size: int) -> Dict:
+    """Per-layer KV page pools, mirroring the segment structure (scan
+    segments stack pools on the leading layer axis like every other
+    per-layer buffer)."""
+    assert supports_paged(cfg), cfg.name
+    tree: Dict[str, Any] = {}
+    for i, seg in enumerate(build_plan(cfg)):
+        if seg.kind == "scan":
+            tree[f"seg{i}"] = {
+                f"pos{j}": param_lib.stack_specs(
+                    attn_lib.paged_cache_specs(cfg, num_pages, page_size), seg.n
+                )
+                for j, d in enumerate(seg.descs)
+            }
+        else:
+            tree[f"seg{i}"] = {
+                f"layer{j}": attn_lib.paged_cache_specs(cfg, num_pages, page_size)
+                for j, d in enumerate(seg.descs)
+            }
+    return tree
+
+
+def init_paged_pools(cfg, num_pages: int, page_size: int) -> Dict:
+    return param_lib.init_params(
+        paged_pool_specs(cfg, num_pages, page_size), jax.random.PRNGKey(0),
+        cfg.dtype,
+    )
+
+
+def _apply_layer_paged(
+    lp: Dict,
+    desc: LayerDesc,
+    pool: Dict,
+    x: jax.Array,
+    block_tables: jax.Array,
+    pos: jax.Array,
+    write_mask: jax.Array,
+    cfg,
+    pruned_ffn: Optional[Dict],
+    collect_stats: bool,
+):
+    h = apply_norm(lp["mixer_norm"], x, cfg)
+    y, new_pool = attn_lib.paged_attn_step(
+        lp["mixer"], pool, block_tables, h, pos, write_mask, cfg,
+        kind=desc.attn_kind,
+    )
+    x = x + y
+
+    stats = None
+    if desc.ffn == "dense":
+        h = apply_norm(lp["ffn_norm"], x, cfg)
+        if pruned_ffn is not None:
+            y = ffn_lib.ffn_forward_perslot(pruned_ffn, h, cfg)
+        else:
+            z = ffn_lib.ffn_activations(lp["ffn"], h, cfg)
+            if collect_stats:
+                # padded chunk tokens must not pollute the statistics:
+                # zeroed rows contribute exactly 0 to every reduction
+                zm = z * write_mask[:, :, None].astype(z.dtype)
+                zf = zm.astype(jnp.float32)
+                hm = (h * write_mask[:, :, None].astype(h.dtype)).astype(
+                    jnp.float32
+                )
+                stats = {
+                    "s_sq": ffn_lib.griffin_stat_sq(zm),
+                    "x_sq": jnp.sum(jnp.square(hm), axis=(0, 1)),
+                    "z_sq": jnp.sum(jnp.square(zf), axis=(0, 1)),
+                }
+            y = jnp.einsum("...f,fd->...d", z, lp["ffn"]["w2"])
+            if "b2" in lp["ffn"]:
+                y = y + lp["ffn"]["b2"]
+        x = x + y
+    if stats is None:  # uniform pytree shape across scan positions
+        B = x.shape[0]
+        stats = {
+            "s_sq": jnp.zeros((B, 0), jnp.float32),
+            "x_sq": jnp.zeros((0,), jnp.float32),
+            "z_sq": jnp.zeros((0,), jnp.float32),
+        }
+    return x, new_pool, stats
+
+
+def decode_step_paged(
+    params: Dict,
+    cfg,
+    pools: Dict,
+    block_tables: jax.Array,  # [B, n_pages] int32, -1 = unallocated
+    token: jax.Array,  # [B, S] int32 (decode: S=1; prefill chunk: S=chunk)
+    pos: jax.Array,  # [B] int32 tokens already cached per request
+    write_mask: Optional[jax.Array] = None,  # [B, S] bool
+    pruned: Optional[Dict] = None,  # per-slot compacted FF tree
+    collect_stats: bool = False,
+) -> Tuple[jax.Array, Dict, Optional[Dict]]:
+    """Batched paged step with per-request positions.
+
+    Unifies chunked prefill (B=1, S=chunk, ``collect_stats`` streams the
+    GRIFFIN ``s_sq`` statistic per chunk) and batched decode (S=1, one
+    request per slot, ``pruned`` holds per-slot compacted FF weights).
+    Returns (logits [B,S,V], new pools, stats tree or None).
+    """
+    B, S = token.shape
+    if write_mask is None:
+        write_mask = jnp.ones((B, S), bool)
+    x = embed_lookup(params["embed"], token, cfg)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    new_pools: Dict[str, Any] = {}
+    stats_tree: Dict[str, Any] = {}
+    for i, seg in enumerate(build_plan(cfg)):
+        key = f"seg{i}"
+        sp = params[key]
+        seg_pool = pools[key]
+        seg_pruned = (pruned or {}).get(key)
+        if seg.kind == "unroll":
+            np_seg, st_seg = {}, {}
+            for j, desc in enumerate(seg.descs):
+                pf = (seg_pruned or {}).get(f"layer{j}")
+                x, npool, st = _apply_layer_paged(
+                    sp[f"layer{j}"], desc, seg_pool[f"layer{j}"], x,
+                    block_tables, pos, write_mask, cfg, pf, collect_stats,
+                )
+                np_seg[f"layer{j}"] = npool
+                if collect_stats:
+                    st_seg[f"layer{j}"] = st
+            new_pools[key] = np_seg
+            stats_tree[key] = st_seg
+        else:
+            def body(x_c, xs, _descs=seg.descs,
+                     _has_pruned=seg_pruned is not None):
+                lp_all, pool_all, pruned_all = xs
+                np_out, st_out = {}, {}
+                for j, desc in enumerate(_descs):
+                    pf = pruned_all.get(f"pos{j}") if _has_pruned else None
+                    x_c, npool, st = _apply_layer_paged(
+                        lp_all[f"pos{j}"], desc, pool_all[f"pos{j}"], x_c,
+                        block_tables, pos, write_mask, cfg, pf, collect_stats,
+                    )
+                    np_out[f"pos{j}"] = npool
+                    st_out[f"pos{j}"] = st if collect_stats else jnp.zeros(())
+                return x_c, (np_out, st_out)
+
+            x, (np_seg, st_seg) = jax.lax.scan(
+                body, x, (sp, seg_pool, seg_pruned or {})
+            )
+            new_pools[key] = np_seg
+            if collect_stats:
+                stats_tree[key] = st_seg
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = lm_logits(params.get("head", {}), params["embed"], x, cfg)
+    return logits, new_pools, (stats_tree if collect_stats else None)
+
+
+# ---------------------------------------------------------------------------
 # GRIFFIN plumbing
 # ---------------------------------------------------------------------------
 

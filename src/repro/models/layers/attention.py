@@ -251,6 +251,108 @@ def fill_cache(cache: Dict, k: jax.Array, v: jax.Array) -> Dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (block-table serving path)
+# ---------------------------------------------------------------------------
+#
+# The pool holds ``num_pages + 1`` fixed-size pages shared by all live
+# requests of one layer; the extra final page is a write-off ("trash")
+# target so padded slots / padded chunk tokens can scatter somewhere
+# harmless without branching.  A request's logical KV positions map to
+# pool pages through its block table (page ids, -1 = unallocated), so
+# attention reads are a page gather followed by the exact same masked
+# softmax as the contiguous path — unwritten slots are masked to
+# NEG_INF, which keeps the math (and, at fp32, the bits) identical.
+
+
+def paged_cache_specs(cfg, num_pages: int, page_size: int) -> Dict[str, ParamSpec]:
+    """KV page pool for one attention layer (+1 trash page)."""
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    axes = ("pages", "page", "kv_heads", "head_dim")
+    return {
+        "k": ParamSpec((num_pages + 1, page_size, KV, hd), axes, init="zeros"),
+        "v": ParamSpec((num_pages + 1, page_size, KV, hd), axes, init="zeros"),
+    }
+
+
+def _gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """pool [P+1, page, KV, hd], block_tables [B, n] -> [B, n*page, KV, hd].
+
+    On TPU this is the Pallas paged-gather kernel (scalar-prefetched
+    block ids drive the BlockSpec index map); off-TPU a plain take.
+    """
+    if jax.default_backend() == "tpu":
+        from repro.kernels import ops
+
+        return ops.paged_kv_gather(pool, block_tables)
+    B, n = block_tables.shape
+    g = jnp.take(pool, jnp.clip(block_tables, 0), axis=0)  # [B, n, page, KV, hd]
+    return g.reshape(B, n * pool.shape[1], *pool.shape[2:])
+
+
+def paged_attn_step(
+    params: Dict,
+    pool: Dict,
+    block_tables: jax.Array,  # [B, n_pages] int32 page ids, -1 = unallocated
+    x: jax.Array,  # [B, S, D] new tokens (decode: S=1; prefill chunk: S=chunk)
+    pos: jax.Array,  # [B] int32 tokens already cached per request
+    write_mask: jax.Array,  # [B, S] bool: which new tokens really exist
+    cfg,
+    kind: str = "global",
+) -> Tuple[jax.Array, Dict]:
+    """One paged step: project, scatter new KV into pages, gather + attend.
+
+    Token ``x[b, s]`` sits at absolute position ``pos[b] + s``; its K/V
+    land in page ``block_tables[b, (pos[b]+s) // page]`` at offset
+    ``(pos[b]+s) % page``.  Tokens with ``write_mask`` False (padding of
+    a partial chunk, inactive decode slots) are redirected to the trash
+    page.  Returns (y [B,S,D], updated pool).
+    """
+    B, S, D = x.shape
+    page = pool["k"].shape[1]
+    trash = pool["k"].shape[0] - 1
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # [B,S]
+    q, k_new, v_new = _project_qkv(params, x, positions, cfg, use_rope=True)
+
+    logical_page = positions // page
+    offset = positions % page
+    gp = jnp.take_along_axis(
+        block_tables, jnp.clip(logical_page, 0, block_tables.shape[1] - 1), axis=1
+    )  # [B, S] pool page per new token
+    ok = write_mask & (gp >= 0) & (logical_page < block_tables.shape[1])
+    gp = jnp.where(ok, gp, trash)
+    KV, hd = k_new.shape[2], k_new.shape[3]
+    new_pool = {
+        "k": pool["k"].at[gp.reshape(-1), offset.reshape(-1)].set(
+            k_new.reshape(B * S, KV, hd)
+        ),
+        "v": pool["v"].at[gp.reshape(-1), offset.reshape(-1)].set(
+            v_new.reshape(B * S, KV, hd)
+        ),
+    }
+
+    k_cache = _gather_pages(new_pool["k"], block_tables)  # [B, C, KV, hd]
+    v_cache = _gather_pages(new_pool["v"], block_tables)
+    C = k_cache.shape[1]
+
+    H = cfg.num_heads
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, KV, G, hd)
+    kpos = jnp.arange(C, dtype=jnp.int32)[None, None, :]  # [1,1,C]
+    qpos = positions[:, :, None]  # [B,S,1]
+    valid = kpos <= qpos
+    if kind == "local" and cfg.sliding_window:
+        valid &= kpos > qpos - cfg.sliding_window
+    # pages never allocated hold stale/zero data — mask them out
+    page_alloc = (block_tables >= 0)[:, :, None]  # [B, n, 1]
+    valid &= page_alloc.repeat(page, axis=2).reshape(B, 1, C)
+    mask = valid[:, None, None]  # [B,1,1,S,C]
+    ctx = _attend(qg, k_cache, v_cache, mask, scale)
+    y = _out_proj(params, ctx.reshape(B, S, H, hd), cfg)
+    return y, new_pool
+
+
 def attn_decode(
     params: Dict,
     cache: Dict,

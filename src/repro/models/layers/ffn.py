@@ -104,6 +104,30 @@ def ffn_forward(
     return y, stats
 
 
+def ffn_forward_perslot(params: Dict, x: jax.Array, cfg) -> jax.Array:
+    """FF forward with *per-request* weights (leading slot axis).
+
+    The paged serving path keeps one GRIFFIN-compacted FF block per
+    decode slot (each request selected its own experts from its own
+    prompt): leaves are [B, D, k] / [B, k, D], x is [B, S, D].
+    """
+    act = activation_fn(cfg.activation)
+    h1 = jnp.einsum("bsd,bdf->bsf", x, params["w1"])
+    if "b1" in params:
+        h1 = h1 + params["b1"][:, None]
+    if "wg" in params:
+        hg = jnp.einsum("bsd,bdf->bsf", x, params["wg"])
+        if "bg" in params:
+            hg = hg + params["bg"][:, None]
+        z = act(hg) * h1
+    else:
+        z = act(h1)
+    y = jnp.einsum("bsf,bfd->bsd", z, params["w2"])
+    if "b2" in params:
+        y = y + params["b2"][:, None]
+    return y
+
+
 def compact_ffn_params(params: Dict, idx: jax.Array, shards: int = 1) -> Dict:
     """GRIFFIN reparameterization (section 4.2): gather expert neurons E.
 

@@ -8,6 +8,13 @@ Two serving modes:
 * ``ContinuousBatcher`` — slot-based continuous batching: requests of
   different lengths join/leave a fixed-size batch; per-slot position
   counters (vmapped decode), per-slot GRIFFIN expert sets.
+
+The production serving path for attention families is the paged-KV
+stack in ``serving/server.py`` (block-table cache, chunked prefill,
+admission/preemption, request telemetry — see ARCHITECTURE.md); the
+``ContinuousBatcher`` remains the fallback for families the paged path
+does not cover (MLA / SSM / RG-LRU / MoE) and the parity reference in
+tests.
 """
 from __future__ import annotations
 

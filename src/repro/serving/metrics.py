@@ -1,0 +1,139 @@
+"""Request-level serving telemetry: TTFT / TPOT / queue time per request,
+pool occupancy and scheduler counters, p50/p95 aggregation.
+
+The clock is injectable so scheduler unit tests can drive virtual time;
+the server uses ``time.perf_counter``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class RequestTimeline:
+    rid: int
+    priority: int = 0
+    submit_t: float = 0.0
+    prefill_start_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    prompt_tokens: int = 0
+    generated_tokens: int = 0
+    prefill_chunks: int = 0
+    preemptions: int = 0
+    aborted: bool = False
+
+    @property
+    def queue_time(self) -> Optional[float]:
+        if self.prefill_start_t is None:
+            return None
+        return self.prefill_start_t - self.submit_t
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Submit -> first generated token."""
+        if self.first_token_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean time per output token after the first."""
+        if self.finish_t is None or self.first_token_t is None:
+            return None
+        n = self.generated_tokens - 1
+        if n <= 0:
+            return 0.0
+        return (self.finish_t - self.first_token_t) / n
+
+
+def percentile(xs: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), p)) if xs else 0.0
+
+
+@dataclass
+class ServingMetrics:
+    clock: Callable[[], float] = time.perf_counter
+    requests: Dict[int, RequestTimeline] = field(default_factory=dict)
+    steps: int = 0
+    decode_steps: int = 0
+    prefill_chunks: int = 0
+    preemptions: int = 0
+    oom_aborts: int = 0
+    pool_occupancy: List[float] = field(default_factory=list)  # in-use frac
+    decode_batch_sizes: List[int] = field(default_factory=list)
+
+    # -- request lifecycle -------------------------------------------------
+    def on_submit(self, rid: int, prompt_tokens: int, priority: int = 0) -> None:
+        self.requests[rid] = RequestTimeline(
+            rid, priority=priority, submit_t=self.clock(),
+            prompt_tokens=prompt_tokens,
+        )
+
+    def on_prefill_chunk(self, rid: int) -> None:
+        r = self.requests[rid]
+        if r.prefill_start_t is None:
+            r.prefill_start_t = self.clock()
+        r.prefill_chunks += 1
+        self.prefill_chunks += 1
+
+    def on_first_token(self, rid: int) -> None:
+        r = self.requests[rid]
+        if r.first_token_t is None:
+            r.first_token_t = self.clock()
+        r.generated_tokens = max(r.generated_tokens, 1)
+
+    def on_token(self, rid: int) -> None:
+        self.requests[rid].generated_tokens += 1
+
+    def on_finish(self, rid: int, aborted: bool = False) -> None:
+        r = self.requests[rid]
+        r.finish_t = self.clock()
+        r.aborted = aborted
+        if aborted:
+            self.oom_aborts += 1
+
+    def on_preemption(self, rid: int) -> None:
+        self.requests[rid].preemptions += 1
+        self.preemptions += 1
+
+    # -- per-step gauges ---------------------------------------------------
+    def on_step(self, pool_in_use_frac: float, decode_batch: int) -> None:
+        self.steps += 1
+        if decode_batch:
+            self.decode_steps += 1
+        self.pool_occupancy.append(pool_in_use_frac)
+        self.decode_batch_sizes.append(decode_batch)
+
+    # -- aggregation -------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        done = [r for r in self.requests.values()
+                if r.finish_t is not None and not r.aborted]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tpots = [r.tpot for r in done if r.tpot is not None]
+        queues = [r.queue_time for r in done if r.queue_time is not None]
+        total_tokens = sum(r.generated_tokens for r in done)
+        t0 = min((r.submit_t for r in done), default=0.0)
+        t1 = max((r.finish_t for r in done), default=0.0)
+        wall = max(t1 - t0, 1e-9)
+        return {
+            "requests_finished": float(len(done)),
+            "requests_aborted": float(self.oom_aborts),
+            "generated_tokens": float(total_tokens),
+            "tokens_per_sec": total_tokens / wall,
+            "ttft_p50_s": percentile(ttfts, 50),
+            "ttft_p95_s": percentile(ttfts, 95),
+            "tpot_p50_s": percentile(tpots, 50),
+            "queue_p50_s": percentile(queues, 50),
+            "preemptions": float(self.preemptions),
+            "prefill_chunks": float(self.prefill_chunks),
+            "steps": float(self.steps),
+            "pool_occupancy_mean": float(np.mean(self.pool_occupancy))
+            if self.pool_occupancy else 0.0,
+            "decode_batch_mean": float(np.mean(self.decode_batch_sizes))
+            if self.decode_batch_sizes else 0.0,
+        }

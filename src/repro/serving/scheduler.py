@@ -1,0 +1,313 @@
+"""Request scheduler: FCFS + priority admission, chunked prefill
+interleaved into decode batches, preemption-by-eviction on pool
+exhaustion.
+
+The scheduler is engine-agnostic (pure host logic over the
+``BlockAllocator``) so its fairness/preemption behavior is unit-testable
+without a model.  Each ``plan_step`` yields at most one prefill chunk
+plus the current decode batch; the server executes the plan on device
+and reports completions back.
+
+GRIFFIN lifecycle per request (the paper's prompt->generation split,
+streamed): every prefill chunk runs the *full* FF blocks and returns the
+chunk's partial ``s_sq`` statistic (eq. 6 is a sum over tokens, so
+chunk-wise accumulation is exact); at the transition to decode the
+accumulated statistic is reduced once (select + compact) and the request
+decodes with its own compacted FF weights from then on.  A preempted
+request is rescheduled recompute-style (pages freed, prefill restarts
+over prompt + generated-so-far) but keeps its compacted weights — the
+expert set stays the one chosen from the original prompt.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.metrics import ServingMetrics
+from repro.serving.paged import BlockAllocator, BlockTable, PagedConfig
+
+QUEUED, PREFILLING, DECODING, FINISHED = "queued", "prefilling", "decoding", "finished"
+
+
+@dataclass
+class ScheduledRequest:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new: int
+    priority: int = 0  # higher = served first
+    seq: int = 0  # arrival order (FCFS tiebreak)
+    state: str = QUEUED
+    generated: List[int] = field(default_factory=list)
+    prefilled: int = 0  # tokens of prefill_tokens already in pages
+    table: BlockTable = field(default_factory=BlockTable)
+    slot: Optional[int] = None  # decode slot while DECODING
+    compacted: bool = False  # GRIFFIN selection frozen
+    preemptions: int = 0
+    aborted: bool = False
+    # server-managed GRIFFIN payloads (jax trees; opaque to the scheduler)
+    s_sq_acc: Any = None
+    pruned_host: Any = None
+
+    @property
+    def prefill_tokens(self) -> np.ndarray:
+        """Tokens that must be resident in the KV pages before decoding:
+        the prompt plus every generated token already consumed as input
+        (the newest generated token is written by the next decode step)."""
+        if self.generated:
+            return np.concatenate(
+                [self.prompt, np.asarray(self.generated[:-1], np.int32)]
+            )
+        return self.prompt
+
+    @property
+    def cache_len(self) -> int:
+        return len(self.prompt) + max(0, len(self.generated) - 1)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new
+
+
+@dataclass
+class PrefillWork:
+    req: ScheduledRequest
+    start: int  # chunk start offset into prefill_tokens
+    tokens: np.ndarray  # [chunk_len] the chunk (unpadded)
+    is_last: bool
+    collect_stats: bool
+    # resume path: generated-token positions were originally decoded with
+    # the request's compacted FF weights, so their KV must be rebuilt with
+    # the same weights (chunks never straddle the prompt/generated boundary)
+    use_pruned: bool = False
+
+
+@dataclass
+class StepPlan:
+    prefill: Optional[PrefillWork] = None
+    decode: List[ScheduledRequest] = field(default_factory=list)
+
+    @property
+    def empty(self) -> bool:
+        return self.prefill is None and not self.decode
+
+
+class Scheduler:
+    def __init__(
+        self,
+        pcfg: PagedConfig,
+        n_slots: int,
+        prefill_chunk: int = 32,
+        metrics: Optional[ServingMetrics] = None,
+    ):
+        self.pcfg = pcfg
+        self.alloc = BlockAllocator(pcfg.num_pages)
+        self.n_slots = n_slots
+        self.prefill_chunk = prefill_chunk
+        self.metrics = metrics if metrics is not None else ServingMetrics()
+        self._seq = itertools.count()
+        self.queue: List[ScheduledRequest] = []
+        self.prefilling: Optional[ScheduledRequest] = None
+        self.decoding: List[ScheduledRequest] = []
+        self.finished: Dict[int, ScheduledRequest] = {}
+
+    # -- submission --------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int, rid: int,
+               priority: int = 0) -> ScheduledRequest:
+        live = list(self.queue) + list(self.decoding)
+        if self.prefilling is not None:
+            live.append(self.prefilling)
+        if rid in self.finished or any(r.rid == rid for r in live):
+            # page ownership and metrics are keyed by rid; a duplicate
+            # would corrupt the allocator when either request frees
+            raise ValueError(f"duplicate request id {rid}")
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) < 1 or max_new < 1:
+            raise ValueError(
+                f"request {rid}: need >=1 prompt token and max_new >= 1 "
+                f"(got {len(prompt)}, {max_new})"
+            )
+        total = len(prompt) + max_new
+        if total > self.pcfg.max_request_len:
+            raise ValueError(
+                f"request {rid}: {total} tokens > block-table capacity "
+                f"{self.pcfg.max_request_len}"
+            )
+        req = ScheduledRequest(rid, prompt, max_new, priority=priority,
+                               seq=next(self._seq))
+        self.queue.append(req)
+        self.metrics.on_submit(rid, len(prompt), priority)
+        return req
+
+    # -- internals ---------------------------------------------------------
+    def _queue_order(self) -> List[ScheduledRequest]:
+        return sorted(self.queue, key=lambda r: (-r.priority, r.seq))
+
+    def _preempt_one(self, needy: ScheduledRequest) -> bool:
+        """Evict the lowest-priority latest-arrival decoding request —
+        but only one *strictly worse* than ``needy`` (lower priority, or
+        same priority and later arrival).  The strictness is the
+        progress guard: without it two requests that cannot coexist in
+        the pool preempt each other forever; with it the better request
+        always keeps its pages, so the worse one stalls until the better
+        finishes and frees them.  Returns True if pages were freed."""
+        candidates = list(self.decoding)
+        if self.prefilling is not None:
+            candidates.append(self.prefilling)  # page-holder too
+        victims = [
+            r for r in candidates
+            if r is not needy
+            and (r.priority, -r.seq) < (needy.priority, -needy.seq)
+        ]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda r: (-r.priority, r.seq))
+        if victim is self.prefilling:
+            self.prefilling = None
+        else:
+            self.decoding.remove(victim)
+        self._evict(victim)
+        return True
+
+    def _evict(self, victim: ScheduledRequest) -> None:
+        """Recompute-style eviction: free pages, requeue from scratch
+        (a compacted request keeps its frozen expert weights)."""
+        self.alloc.free_request(victim.rid)
+        victim.table = BlockTable()
+        victim.slot = None
+        victim.prefilled = 0
+        victim.preemptions += 1
+        if not victim.compacted:
+            victim.s_sq_acc = None  # stats restart with the re-prefill
+        victim.state = QUEUED
+        self.queue.append(victim)
+        self.metrics.on_preemption(victim.rid)
+
+    def _ensure_pages(self, req: ScheduledRequest, total_tokens: int) -> bool:
+        """Grow ``req``'s block table to cover ``total_tokens``,
+        preempting decoders if the pool is exhausted.  Returns success."""
+        need = req.table.pages_needed(total_tokens, self.pcfg.page_size)
+        if need == 0:
+            return True
+        while not self.alloc.can_alloc(need):
+            if not self._preempt_one(req):
+                return False
+        req.table.pages.extend(self.alloc.alloc(req.rid, need))
+        return True
+
+    def _abort(self, req: ScheduledRequest) -> None:
+        self.alloc.free_request(req.rid)
+        req.table = BlockTable()
+        req.state = FINISHED
+        req.aborted = True
+        req.slot = None
+        self.finished[req.rid] = req
+        self.metrics.on_finish(req.rid, aborted=True)
+
+    # -- planning ----------------------------------------------------------
+    def plan_step(self) -> StepPlan:
+        plan = StepPlan()
+
+        # admission: one request prefills at a time, highest priority first
+        if self.prefilling is None and self.queue \
+                and len(self.decoding) < self.n_slots:
+            req = self._queue_order()[0]
+            self.queue.remove(req)
+            req.state = PREFILLING
+            self.prefilling = req
+
+        # chunked prefill: at most one chunk per step
+        if self.prefilling is not None:
+            req = self.prefilling
+            toks = req.prefill_tokens
+            start = req.prefilled
+            P = len(req.prompt)
+            end = min(start + self.prefill_chunk, P if start < P else len(toks))
+            if not self._ensure_pages(req, end):
+                if not self.decoding:
+                    # nothing to evict and nothing will free pages: the
+                    # request cannot ever fit
+                    self.prefilling = None
+                    self._abort(req)
+                elif any((r.priority, -r.seq) > (req.priority, -req.seq)
+                         for r in self.queue):
+                    # the stall would block a strictly-better arrival
+                    # behind this request for a full decoder drain —
+                    # yield the prefill slot instead
+                    self.prefilling = None
+                    self._evict(req)
+                # else: stall the chunk; decoders drain and free pages
+            else:
+                plan.prefill = PrefillWork(
+                    req, start, toks[start:end], is_last=end == len(toks),
+                    collect_stats=not req.compacted,
+                    use_pruned=req.compacted and start >= P,
+                )
+
+        # decode batch: every decoding request advances one token; each
+        # needs its next page before its KV write at position cache_len
+        stalled = []
+        for req in list(self.decoding):
+            if req.state != DECODING:  # preempted by an earlier iteration
+                continue
+            if not self._ensure_pages(req, req.cache_len + 1):
+                others = self.alloc.num_in_use - len(req.table.pages)
+                if others > 0:
+                    # strictly-better requests hold the pool; they will
+                    # finish and free pages — sit this batch out
+                    stalled.append(req)
+                else:  # alone in the pool and still does not fit
+                    self._abort(req)
+                    self.decoding.remove(req)
+        plan.decode = [r for r in self.decoding if r not in stalled]
+        if plan.prefill is not None and plan.prefill.req is not self.prefilling:
+            plan.prefill = None  # evicted by a better decoder's growth
+        return plan
+
+    # -- completion callbacks (driven by the server) -----------------------
+    def finish_prefill_chunk(self, work: PrefillWork,
+                             first_token: Optional[int] = None) -> None:
+        req = work.req
+        assert req is self.prefilling
+        req.prefilled = work.start + len(work.tokens)
+        self.metrics.on_prefill_chunk(req.rid)
+        if not work.is_last:
+            return
+        # prefill complete -> decode (TTFT token comes from prefill logits
+        # unless the request resumed with generated tokens in hand)
+        self.prefilling = None
+        if first_token is not None and not req.generated:
+            req.generated.append(first_token)
+            self.metrics.on_first_token(req.rid)
+        req.state = DECODING
+        used = {r.slot for r in self.decoding}
+        req.slot = min(set(range(self.n_slots)) - used)
+        self.decoding.append(req)
+        if req.done:  # max_new == 1
+            self._finish(req)
+
+    def finish_decode_token(self, req: ScheduledRequest, token: int) -> None:
+        req.generated.append(token)
+        self.metrics.on_token(req.rid)
+        if req.done:
+            self._finish(req)
+
+    def _finish(self, req: ScheduledRequest) -> None:
+        if req in self.decoding:
+            self.decoding.remove(req)
+        self.alloc.free_request(req.rid)
+        req.table = BlockTable()
+        req.state = FINISHED
+        req.slot = None
+        self.finished[req.rid] = req
+        self.metrics.on_finish(req.rid)
+
+    # -- state -------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.prefilling or self.decoding)
+
+    def pool_in_use_frac(self) -> float:
+        return self.alloc.num_in_use / max(1, self.alloc.num_pages)

@@ -1,0 +1,222 @@
+"""Paged serving front-end: ``submit`` / ``step`` / ``drain``.
+
+Execution model per ``step()`` (one scheduler tick):
+
+  1. at most one prefill chunk of the highest-priority admitted request
+     runs through the full model (GRIFFIN stats streamed per chunk),
+  2. the decode batch advances every DECODING request by one token in a
+     single jitted call over ``n_slots`` padded slots (per-slot
+     positions, block tables, and — with GRIFFIN — per-slot compacted
+     FF weights).
+
+Both phases share the per-layer KV page pools; all host state (block
+tables, positions, tokens) lives in the scheduler's request objects.
+Shapes are static ([1, prefill_chunk] and [n_slots, 1]) so exactly two
+decode-path programs are ever compiled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import griffin as griffin_lib
+from repro.models import decoder
+from repro.serving.metrics import ServingMetrics
+from repro.serving.paged import PagedConfig
+from repro.serving.scheduler import (
+    DECODING,
+    PrefillWork,
+    ScheduledRequest,
+    Scheduler,
+)
+
+
+class PagedServer:
+    def __init__(
+        self,
+        cfg,
+        params: Dict,
+        gcfg: Optional[griffin_lib.GriffinConfig] = None,
+        *,
+        page_size: int = 16,
+        num_pages: int = 96,
+        n_slots: int = 4,
+        prefill_chunk: int = 32,
+        max_len: int = 256,
+        metrics: Optional[ServingMetrics] = None,
+    ):
+        assert decoder.supports_paged(cfg), (
+            f"{cfg.name}: paged serving covers attention families only"
+        )
+        self.cfg, self.params = cfg, params
+        self.gcfg = gcfg if (gcfg is not None and cfg.griffin and cfg.has_ffn) \
+            else None
+        self.pcfg = PagedConfig(
+            page_size=page_size, num_pages=num_pages,
+            max_pages_per_request=-(-max_len // page_size),
+        )
+        self.n_slots = n_slots
+        self.sched = Scheduler(self.pcfg, n_slots, prefill_chunk,
+                               metrics=metrics)
+        self.pools = decoder.init_paged_pools(cfg, num_pages, page_size)
+        self.pruned_slots: Optional[Dict] = None  # per-slot compacted FF
+        self._next_rid = 0
+
+        def prefill(params, pools, bt, tokens, pos, mask, pruned, collect):
+            return decoder.decode_step_paged(
+                params, cfg, pools, bt, tokens, pos, write_mask=mask,
+                pruned=pruned, collect_stats=collect,
+            )
+
+        self._prefill = jax.jit(prefill, static_argnames=("collect",))
+
+        def dec(params, pools, bts, toks, pos, mask, pruned):
+            logits, pools, _ = decoder.decode_step_paged(
+                params, cfg, pools, bts, toks, pos, write_mask=mask,
+                pruned=pruned,
+            )
+            return logits, pools
+
+        self._decode = jax.jit(dec)
+
+    # -- API ---------------------------------------------------------------
+    @property
+    def metrics(self) -> ServingMetrics:
+        return self.sched.metrics
+
+    def submit(self, prompt: np.ndarray, max_new: int,
+               rid: Optional[int] = None, priority: int = 0) -> int:
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid + 1)
+        self.sched.submit(prompt, max_new, rid, priority)
+        return rid
+
+    def step(self) -> bool:
+        """One scheduler tick; returns True while work remains."""
+        plan = self.sched.plan_step()
+        if plan.prefill is not None:
+            self._run_prefill(plan.prefill)
+        if plan.decode:
+            self._run_decode(plan.decode)
+        self.sched.metrics.on_step(self.sched.pool_in_use_frac(),
+                                   len(plan.decode))
+        return self.sched.has_work
+
+    def drain(self) -> Dict[int, List[int]]:
+        """Run until idle; returns generated tokens per finished request."""
+        while self.step():
+            pass
+        return {rid: r.generated for rid, r in self.sched.finished.items()
+                if not r.aborted}
+
+    # -- phases ------------------------------------------------------------
+    def _run_prefill(self, work: PrefillWork) -> None:
+        req, chunk = work.req, self.sched.prefill_chunk
+        Lc = len(work.tokens)
+        toks = np.zeros((1, chunk), np.int32)
+        toks[0, :Lc] = work.tokens
+        mask = np.zeros((1, chunk), bool)
+        mask[0, :Lc] = True
+        bt = req.table.as_array(self.pcfg.max_pages_per_request)[None]
+        pos = np.array([work.start], np.int32)
+        collect = work.collect_stats and self.gcfg is not None
+        # resume of a compacted request: generated-token positions must
+        # rebuild their KV with the same compacted FF weights that decoded
+        # them, or the restored cache (and all post-resume logits) diverge
+        pruned = self._expand_b1(req.pruned_host) if work.use_pruned else None
+        logits, self.pools, stats = self._prefill(
+            self.params, self.pools, jnp.asarray(bt), jnp.asarray(toks),
+            jnp.asarray(pos), jnp.asarray(mask), pruned, collect,
+        )
+        if collect:
+            part = decoder.prune_stats_tree(stats, self.cfg)
+            req.s_sq_acc = part if req.s_sq_acc is None else jax.tree.map(
+                jnp.add, req.s_sq_acc, part
+            )
+        first_token = None
+        if work.is_last and not req.generated:
+            first_token = int(np.argmax(np.asarray(logits)[0, Lc - 1]))
+        self.sched.finish_prefill_chunk(work, first_token)
+        if work.is_last and req.state == DECODING and self.gcfg is not None:
+            if not req.compacted:
+                sel = griffin_lib.select_tree(req.s_sq_acc, self.gcfg)
+                ffn_tree = decoder.extract_ffn_tree(self.params, self.cfg)
+                req.pruned_host = griffin_lib.compact_tree(ffn_tree, sel)
+                req.compacted = True
+                req.s_sq_acc = None
+            self._install_pruned(req.slot, req.pruned_host)
+
+    def _run_decode(self, reqs: List[ScheduledRequest]) -> None:
+        B, W = self.n_slots, self.pcfg.max_pages_per_request
+        toks = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        mask = np.zeros((B, 1), bool)
+        bts = np.full((B, W), -1, np.int32)
+        for req in reqs:
+            s = req.slot
+            toks[s, 0] = req.generated[-1]
+            pos[s] = req.cache_len
+            mask[s, 0] = True
+            bts[s] = req.table.as_array(W)
+        pruned = self.pruned_slots if self.gcfg is not None else None
+        logits, self.pools = self._decode(
+            self.params, self.pools, jnp.asarray(bts), jnp.asarray(toks),
+            jnp.asarray(pos), jnp.asarray(mask), pruned,
+        )
+        logits = np.asarray(logits)  # [slots, 1, V]
+        for req in reqs:
+            self.sched.finish_decode_token(req, int(np.argmax(logits[req.slot, 0])))
+
+    # -- per-slot GRIFFIN weights ------------------------------------------
+    def _expand_b1(self, pruned1: Dict) -> Dict:
+        """A request's compacted FF tree in the batch-of-1 slot layout
+        ``decode_step_paged`` expects (slot axis 0 for unrolled layers,
+        axis 1 for scan-stacked ones)."""
+        out: Dict[str, Any] = {}
+        for seg, layers in pruned1.items():
+            out[seg] = {}
+            for name, ffn in layers.items():
+                ax = 1 if name.startswith("pos") else 0
+                out[seg][name] = {k: jnp.expand_dims(v, ax)
+                                  for k, v in ffn.items()}
+        return out
+
+    def _install_pruned(self, slot: int, pruned1: Dict) -> None:
+        """Write one request's compacted FF tree into its decode slot.
+
+        Slot buffers carry the slot axis at 0 for unrolled layers and at
+        1 (inside the scan-stacked layer axis) for scan segments, so the
+        decode ``lax.scan`` keeps scanning axis 0.
+        """
+
+        def leaf_axis(name: str) -> int:
+            return 1 if name.startswith("pos") else 0
+
+        if self.pruned_slots is None:
+            out: Dict[str, Any] = {}
+            for seg, layers in pruned1.items():
+                out[seg] = {}
+                for name, ffn in layers.items():
+                    ax = leaf_axis(name)
+                    out[seg][name] = {
+                        k: jnp.broadcast_to(
+                            jnp.expand_dims(v, ax),
+                            v.shape[:ax] + (self.n_slots,) + v.shape[ax:],
+                        )
+                        for k, v in ffn.items()
+                    }
+            self.pruned_slots = out
+            return
+        for seg, layers in pruned1.items():
+            for name, ffn in layers.items():
+                buf = self.pruned_slots[seg][name]
+                for k, v in ffn.items():
+                    if leaf_axis(name):
+                        buf[k] = buf[k].at[:, slot].set(v)
+                    else:
+                        buf[k] = buf[k].at[slot].set(v)

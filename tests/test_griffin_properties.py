@@ -1,11 +1,12 @@
 """Property-based tests of the GRIFFIN invariants (hypothesis)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+given, settings = hypothesis.given, hypothesis.settings
 
 from repro.core import GriffinConfig, aggregate_stats, select_experts
 from repro.core import selector as sel

@@ -1,12 +1,13 @@
 """Pallas kernel validation: sweep shapes/dtypes, assert_allclose against
 the pure-jnp oracles in ref.py (interpret mode on CPU)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+given = hypothesis.given
 
 from repro.kernels import ops
 
