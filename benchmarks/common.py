@@ -1,10 +1,21 @@
-"""Shared benchmark utilities: the trained tiny model + eval sequences."""
+"""Shared benchmark utilities: the trained tiny model + eval sequences,
+plus machine-readable result persistence.
+
+Every ``emit`` both prints the legacy ``name,us_per_call,derived`` CSV
+row and records it in an in-memory buffer; the harness
+(``benchmarks/run.py``) drains the buffer after each benchmark and
+writes ``BENCH_<name>.json`` — the persisted perf trajectory EXPERIMENTS.md
+tracks across PRs.  ``record`` attaches structured extras (e.g. the
+speculative benchmark's acceptance rate and tokens/sec) to the current
+benchmark's JSON.
+"""
 from __future__ import annotations
 
+import json
 import sys
 import time
 from pathlib import Path
-from typing import Dict, Tuple
+from typing import Any, Dict, List, Tuple
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
@@ -20,17 +31,31 @@ from repro.training import optimizer as opt_lib
 from repro.training.loop import train
 from repro.training.schedule import warmup_cosine
 
-CKPT_DIR = Path("artifacts/models/tinylm")
+CKPT_ROOT = Path("artifacts/models")
 
 
 def trained_tiny(steps: int = 500) -> Tuple[object, Dict]:
-    """Load the cached trained tinylm (train it if absent)."""
+    """Load the tinylm trained for exactly ``steps`` steps (train and
+    cache on first use).
+
+    The cache directory is keyed by ``steps`` — otherwise whichever
+    caller warms the cache first (a 120-step test vs the 500-step
+    benchmark default) silently decides every later caller's model,
+    and persisted BENCH numbers stop being reproducible."""
     cfg = get_config("tinylm")
-    mgr = CheckpointManager(str(CKPT_DIR), interval=100, keep=2)
-    if mgr.latest_step() is None:
+    mgr = CheckpointManager(str(CKPT_ROOT / f"tinylm-s{steps}"),
+                            interval=100, keep=2)
+    # only the final checkpoint counts: an interrupted training run
+    # leaves intermediate saves that must trigger a resumed train, not
+    # be silently served as the finished model.  The loader is started
+    # at the resume step so batch content stays a pure function of the
+    # step index — a resumed run consumes exactly the batches a clean
+    # run would, and converges to the identical model.
+    if mgr.latest_step() != steps:
         opt = opt_lib.adamw(warmup_cosine(3e-3, 25, steps))
         corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
-        loader = ShardedLoader(corpus, batch=16, seq_len=256, seed=1)
+        loader = ShardedLoader(corpus, batch=16, seq_len=256, seed=1,
+                               start_step=mgr.latest_step() or 0)
         res = train(cfg, opt, loader, steps, ckpt=mgr, log_every=100)
         loader.close()
         mgr.save(int(res.state["step"]), res.state, force=True)
@@ -60,5 +85,37 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return float(np.median(ts) * 1e6)
 
 
+_ROWS: List[Dict[str, Any]] = []
+_EXTRA: Dict[str, Any] = {}
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": float(us_per_call),
+                  "derived": derived})
+
+
+def record(key: str, value) -> None:
+    """Attach a structured extra to the currently running benchmark's
+    ``BENCH_<name>.json`` (lists/dicts/scalars; must be JSON-able)."""
+    _EXTRA[key] = value
+
+
+def drain_results() -> Tuple[List[Dict[str, Any]], Dict[str, Any]]:
+    """Return and clear the rows/extras emitted since the last drain."""
+    global _ROWS, _EXTRA
+    rows, extra = _ROWS, _EXTRA
+    _ROWS, _EXTRA = [], {}
+    return rows, extra
+
+
+def write_bench_json(bench: str, rows: List[Dict[str, Any]],
+                     extra: Dict[str, Any], out_dir: Path) -> Path:
+    """Persist one benchmark's results as ``BENCH_<bench>.json``."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"BENCH_{bench}.json"
+    payload = {"bench": bench, "rows": rows}
+    if extra:
+        payload["data"] = extra
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return path

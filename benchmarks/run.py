@@ -1,6 +1,8 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  Quality numbers come from
+Prints ``name,us_per_call,derived`` CSV rows and persists each
+benchmark's results as ``BENCH_<name>.json`` (the perf trajectory —
+see EXPERIMENTS.md section Trajectory).  Quality numbers come from
 the framework-trained tiny char-LM (the container is CPU-only; DESIGN.md
 section 7 explains the mechanism-scale validation strategy).  Hardware
 numbers for the assigned architectures come from the dry-run artifacts
@@ -8,10 +10,12 @@ numbers for the assigned architectures come from the dry-run artifacts
 
   PYTHONPATH=src python -m benchmarks.run              # everything
   PYTHONPATH=src python -m benchmarks.run --only table2,fig4
+  PYTHONPATH=src python -m benchmarks.run --only speculative --smoke
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import sys
 import time
@@ -23,7 +27,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, eval_sequences, timeit, trained_tiny
+from benchmarks.common import (
+    drain_results,
+    emit,
+    eval_sequences,
+    record,
+    timeit,
+    trained_tiny,
+    write_bench_json,
+)
 from repro.core import GriffinConfig, evaluate
 from repro.core.flocking import flocking_score, pairwise_jaccard, sequence_statistic
 from repro.models import decoder
@@ -349,6 +361,84 @@ def bench_serving() -> None:
 
 
 # ---------------------------------------------------------------------------
+# Speculative: self-speculative decoding with GRIFFIN draft experts
+# ---------------------------------------------------------------------------
+
+def bench_speculative(smoke: bool = False) -> None:
+    """GRIFFIN-draft speculative decoding vs vanilla dense decode.
+
+    The same request trace runs through two PagedServers: ``dense``
+    (gcfg=None, spec_k=0 — vanilla greedy decode) and ``griffin_draft``
+    (per-request 50%-FF compacted draft, spec_k drafts per verify).
+    Greedy speculative output must be token-identical to dense; the
+    benchmark reports tokens/sec, acceptance rate, tokens-per-verify,
+    and TTFT/TPOT per mode, persisted to BENCH_speculative.json.
+
+    CPU caveat (same as bench_serving): the draft steps' per-slot
+    compacted einsums don't beat one dense matmul on XLA:CPU, so the
+    wall-clock win here materializes on TPU where draft steps cost
+    ~sparsity× the HBM traffic of dense steps; acceptance rate ×
+    tokens_per_verify is the hardware-independent signal (DESIGN.md
+    section 5).
+    """
+    from repro.data.pipeline import SyntheticCorpus
+    from repro.serving.server import PagedServer
+
+    cfg, params = trained_tiny(steps=120 if smoke else 500)
+    corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
+    n_req = 4 if smoke else 12
+    max_new = 12 if smoke else 32
+    spec_k = 4
+    rng = np.random.default_rng(17)
+    prompts = [corpus.sample(int(rng.integers(24, 64)), seed=5000 + i)
+               for i in range(n_req)]
+
+    modes = {
+        "dense": dict(gcfg=None, spec_k=0),
+        "griffin_draft": dict(
+            gcfg=GriffinConfig(sparsity=0.5, per_shard_topk=False),
+            spec_k=spec_k,
+        ),
+    }
+    outputs, summaries = {}, {}
+    for mode, kwargs in modes.items():
+        srv = PagedServer(cfg, params, page_size=16, num_pages=96,
+                          n_slots=4, prefill_chunk=32, max_len=128, **kwargs)
+        t0 = time.perf_counter()
+        for i, p in enumerate(prompts):
+            srv.submit(p, max_new=max_new, rid=i)
+        outputs[mode] = srv.drain()
+        wall = time.perf_counter() - t0
+        m = srv.metrics.summary()
+        summaries[mode] = {
+            "wall_s": wall,
+            "tokens_per_sec": m["tokens_per_sec"],
+            "ttft_p50_s": m["ttft_p50_s"],
+            "ttft_p95_s": m["ttft_p95_s"],
+            "tpot_p50_s": m["tpot_p50_s"],
+            "acceptance_rate": m["acceptance_rate"],
+            "tokens_per_verify": m["tokens_per_verify"],
+            "spec_rounds": m["spec_rounds"],
+            "generated_tokens": m["generated_tokens"],
+        }
+        emit(
+            f"speculative_{mode}", wall * 1e6,
+            f"n={n_req} tok/s={m['tokens_per_sec']:.1f} "
+            f"acc={m['acceptance_rate']:.3f} "
+            f"tok_per_verify={m['tokens_per_verify']:.2f} "
+            f"ttft_p50={m['ttft_p50_s']:.3f}s "
+            f"tpot_p50={m['tpot_p50_s'] * 1e3:.1f}ms",
+        )
+    identical = outputs["dense"] == outputs["griffin_draft"]
+    emit("speculative_greedy_parity", 0.0, f"token_identical={identical}")
+    record("spec_k", spec_k)
+    record("smoke", bool(smoke))
+    record("modes", summaries)
+    record("token_identical", bool(identical))
+    assert identical, "greedy speculative decode diverged from dense decode"
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from dry-run artifacts
 # ---------------------------------------------------------------------------
 
@@ -385,6 +475,7 @@ BENCHES = {
     "table3": bench_table3_latency,
     "kernels": bench_kernels,
     "serving": bench_serving,
+    "speculative": bench_speculative,
     "roofline": bench_roofline_table,
 }
 
@@ -393,11 +484,29 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(BENCHES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes/trace for CI smoke runs")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for the BENCH_<name>.json artifacts")
     args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(BENCHES)
+    names = [n.strip() for n in (args.only.split(",") if args.only
+                                 else list(BENCHES))]
     print("name,us_per_call,derived")
+    drain_results()  # drop anything emitted outside the harness
     for name in names:
-        BENCHES[name.strip()]()
+        fn = BENCHES[name]
+        try:
+            if "smoke" in inspect.signature(fn).parameters:
+                fn(smoke=args.smoke)
+            else:
+                fn()
+        finally:
+            # persist whatever was emitted even when the bench raises
+            # (e.g. the speculative parity assertion): the artifact is
+            # the diagnostic for exactly that failure
+            rows, extra = drain_results()
+            if rows or extra:
+                write_bench_json(name, rows, extra, Path(args.out_dir))
 
 
 if __name__ == "__main__":

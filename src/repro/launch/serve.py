@@ -39,17 +39,25 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--sparsity", type=float, default=0.5)
     ap.add_argument("--no-griffin", action="store_true")
-    ap.add_argument("--ckpt-dir", default="artifacts/models/tinylm")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative decoding: tokens drafted per "
+                         "verify with the GRIFFIN-compacted weights "
+                         "(requires GRIFFIN; output stays dense-exact)")
+    ap.add_argument("--ckpt-dir", default="artifacts/models/tinylm-s500")
     args = ap.parse_args()
 
     if args.arch == "tinylm":
         cfg = get_config("tinylm")
         mgr = CheckpointManager(args.ckpt_dir, interval=1)
         if mgr.latest_step() is not None:
-            state, _ = mgr.restore_latest()
+            state, step = mgr.restore_latest()
             params = jax.tree.map(jax.numpy.asarray, state["params"])
+            print(f"[ckpt] loaded {args.ckpt_dir} (step {step})")
         else:
             params = decoder.init_params(cfg, jax.random.PRNGKey(0))
+            print(f"[ckpt] no checkpoint in {args.ckpt_dir}; serving an "
+                  f"UNTRAINED init (train one via benchmarks.common."
+                  f"trained_tiny or pass --ckpt-dir)")
     else:
         cfg = get_config(args.arch, smoke=True)
         params = decoder.init_params(cfg, jax.random.PRNGKey(0))
@@ -65,11 +73,19 @@ def main() -> None:
     ]
 
     mode = f"GRIFFIN@{args.sparsity:.0%}" if gcfg else "full model"
+    if args.spec_k and gcfg is None:
+        ap.error("--spec-k requires GRIFFIN (drop --no-griffin)")
+    if args.spec_k and not decoder.supports_paged(cfg):
+        ap.error(f"--spec-k requires the paged serving path; "
+                 f"{cfg.name} falls back to the slot batcher")
+    if args.spec_k:
+        mode += f"+spec{args.spec_k}"
     if decoder.supports_paged(cfg):
         srv = PagedServer(
             cfg, params, gcfg=gcfg, page_size=args.page_size,
             num_pages=args.num_pages, n_slots=args.slots,
             prefill_chunk=args.prefill_chunk, max_len=args.max_len,
+            spec_k=args.spec_k,
         )
         for rid, (prompt, gen) in enumerate(reqs):
             srv.submit(prompt, max_new=gen, rid=rid)
@@ -83,6 +99,10 @@ def main() -> None:
         print(f"  ttft p50={m['ttft_p50_s']:.3f}s p95={m['ttft_p95_s']:.3f}s "
               f"occupancy={m['pool_occupancy_mean']:.0%} "
               f"preemptions={m['preemptions']:.0f}")
+        if args.spec_k:
+            print(f"  spec: acceptance={m['acceptance_rate']:.3f} "
+                  f"tokens/verify={m['tokens_per_verify']:.2f} "
+                  f"rounds={m['spec_rounds']:.0f}")
         return
 
     cb = ContinuousBatcher(cfg, params, n_slots=args.slots,

@@ -24,6 +24,8 @@ Public API (all pure, jit-friendly; ``cfg`` static):
     cache_specs(cfg, batch, max_len)         -> ParamSpec tree (decode cache)
     fill_cache_from_prefill(cfg, cache, aux) -> cache
     decode_step(params, cfg, cache, token, pos, pruned=None) -> logits, cache
+    decode_step_paged(params, cfg, pools, bt, tokens, pos, ...) -> logits, pools, stats
+    verify_step_paged(params, cfg, pools, bt, tokens, pos, mask) -> logits, pools
     extract_ffn_tree(params, cfg)            -> tree of dense-FF params
 """
 from __future__ import annotations
@@ -789,6 +791,40 @@ def decode_step_paged(
     x = apply_norm(params["final_norm"], x, cfg)
     logits = lm_logits(params.get("head", {}), params["embed"], x, cfg)
     return logits, new_pools, (stats_tree if collect_stats else None)
+
+
+def verify_step_paged(
+    params: Dict,
+    cfg,
+    pools: Dict,
+    block_tables: jax.Array,  # [B, n_pages] int32, -1 = unallocated
+    tokens: jax.Array,  # [B, k+1] int32: last committed token + k drafts
+    pos: jax.Array,  # [B] int32 committed KV length per request
+    write_mask: jax.Array,  # [B, k+1] bool
+) -> Tuple[jax.Array, Dict]:
+    """Multi-token dense verify step for self-speculative decoding.
+
+    Scores all ``k+1`` positions of a drafted continuation in one
+    batched pass with the *full* (uncompacted) weights — the same
+    ``paged_attn_step`` causal-masked path as a prefill chunk, but
+    batched over decode slots with per-request positions.  Token
+    ``tokens[b, i]`` sits at absolute position ``pos[b] + i``; its
+    dense KV overwrites whatever the draft wrote there, so accepted
+    positions end up with exactly the KV a vanilla dense decode would
+    have written.  Rejected positions (``>= cache_len`` after the
+    commit) hold stale KV that every reader masks out (page lifecycle
+    contract in ``serving/paged.py``).
+
+    Returns (logits [B, k+1, V], new pools).  Row ``i`` of the logits
+    scores the position after input ``i`` — the acceptance walk over
+    these rows lives in ``serving/sampling.py::greedy_verify`` /
+    ``speculative_verify``.
+    """
+    logits, pools, _ = decode_step_paged(
+        params, cfg, pools, block_tables, tokens, pos,
+        write_mask=write_mask, pruned=None, collect_stats=False,
+    )
+    return logits, pools
 
 
 # ---------------------------------------------------------------------------

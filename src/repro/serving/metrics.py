@@ -1,8 +1,17 @@
 """Request-level serving telemetry: TTFT / TPOT / queue time per request,
-pool occupancy and scheduler counters, p50/p95 aggregation.
+pool occupancy and scheduler counters, speculative-decoding acceptance,
+p50/p95 aggregation.
 
 The clock is injectable so scheduler unit tests can drive virtual time;
 the server uses ``time.perf_counter``.
+
+Speculative counters (``on_spec_round``): one *round* is a draft of
+``k`` tokens plus one dense verify step.  ``acceptance_rate`` is the
+fraction of drafted tokens the dense model kept; ``tokens_per_verify``
+(committed tokens per round, in [1, k+1]) is the draft-efficiency
+number that converts directly into decode-step amortization: each
+round replaces ``committed`` vanilla dense steps with ``k`` cheap
+draft steps + 1 dense verify.
 """
 from __future__ import annotations
 
@@ -26,6 +35,9 @@ class RequestTimeline:
     prefill_chunks: int = 0
     preemptions: int = 0
     aborted: bool = False
+    draft_tokens: int = 0
+    accepted_draft_tokens: int = 0
+    spec_rounds: int = 0
 
     @property
     def queue_time(self) -> Optional[float]:
@@ -66,6 +78,11 @@ class ServingMetrics:
     oom_aborts: int = 0
     pool_occupancy: List[float] = field(default_factory=list)  # in-use frac
     decode_batch_sizes: List[int] = field(default_factory=list)
+    # speculative decoding (one round = k draft steps + 1 verify step)
+    spec_rounds: int = 0
+    draft_tokens: int = 0
+    accepted_draft_tokens: int = 0
+    spec_committed_tokens: int = 0
 
     # -- request lifecycle -------------------------------------------------
     def on_submit(self, rid: int, prompt_tokens: int, priority: int = 0) -> None:
@@ -96,6 +113,20 @@ class ServingMetrics:
         r.aborted = aborted
         if aborted:
             self.oom_aborts += 1
+
+    def on_spec_round(self, rid: int, drafted: int, accepted: int,
+                      committed: int) -> None:
+        """One draft+verify round: ``drafted`` tokens proposed,
+        ``accepted`` kept by the dense model, ``committed`` tokens
+        emitted (accepted + the correction/bonus, capped by max_new)."""
+        r = self.requests[rid]
+        r.spec_rounds += 1
+        r.draft_tokens += drafted
+        r.accepted_draft_tokens += accepted
+        self.spec_rounds += 1
+        self.draft_tokens += drafted
+        self.accepted_draft_tokens += accepted
+        self.spec_committed_tokens += committed
 
     def on_preemption(self, rid: int) -> None:
         self.requests[rid].preemptions += 1
@@ -136,4 +167,10 @@ class ServingMetrics:
             if self.pool_occupancy else 0.0,
             "decode_batch_mean": float(np.mean(self.decode_batch_sizes))
             if self.decode_batch_sizes else 0.0,
+            "spec_rounds": float(self.spec_rounds),
+            "draft_tokens": float(self.draft_tokens),
+            "acceptance_rate": self.accepted_draft_tokens / self.draft_tokens
+            if self.draft_tokens else 0.0,
+            "tokens_per_verify": self.spec_committed_tokens / self.spec_rounds
+            if self.spec_rounds else 0.0,
         }

@@ -13,6 +13,29 @@ Why paging matters for GRIFFIN serving: generation-phase latency wins
 keep many requests resident; preallocating ``max_len`` KV per slot (the
 old ``ContinuousBatcher``) wastes ~60-80% of cache memory on short
 requests.  Pages bound that waste to one page per request.
+
+Page lifecycle contract (who may do what, in order):
+
+1. **Grow** — only the scheduler extends a request's block table
+   (``Scheduler._ensure_pages`` for committed tokens,
+   ``Scheduler.reserve_draft`` for speculative scratch), and always
+   through ``BlockAllocator.alloc`` so ownership is tracked.
+2. **Write** — the device step writes a token's K/V into the page that
+   the request's block table maps its position to; tokens without a
+   page (padding, inactive slots) are redirected to the trash page.
+   Positions ``>= cache_len`` may hold stale data at any time: readers
+   mask ``kpos <= qpos``, so stale entries are never observable.
+3. **Shrink** — pages are returned either all at once
+   (``free_request``: finish, abort, preemption-eviction) or as an
+   exact tail rollback (``free_pages``: speculative-draft rollback).
+   ``free_pages`` restores the allocator's free list to the state it
+   would have had if the freed pages were never allocated, so a
+   draft-then-rollback cycle is bit-invisible to later allocations
+   (see DESIGN.md section 5).
+
+A page is owned by at most one request at a time; no component other
+than the allocator may move page ids between the free list and a block
+table.
 """
 from __future__ import annotations
 
@@ -75,6 +98,31 @@ class BlockAllocator:
             assert p not in self._free, p
             self._free.append(p)
         return len(pages)
+
+    def free_pages(self, rid: int, pages: List[int]) -> None:
+        """Return specific pages owned by ``rid`` to the free list.
+
+        Rollback primitive for speculative drafting: ``pages`` must be
+        the *most recently allocated* pages of the request (a block-table
+        tail, in allocation order).  They are pushed back in reverse so
+        the free list — and therefore every subsequent ``alloc`` — is
+        bit-identical to a history in which they were never handed out.
+
+        Scope of the bit-identity claim: it holds when rollbacks unwind
+        the allocation stack LIFO — a single drafting request, or a
+        multi-request tick rolled back in reverse reservation order
+        (the server does this).  If several requests *keep* draft pages
+        that interleave on the stack, the free *set* and ownership are
+        still exact but the free-list order can differ from the
+        never-drafted history (allocation correctness is unaffected;
+        only deterministic replay of page ids would notice).
+        """
+        for p in reversed(pages):
+            owner = self._owner.get(p)
+            assert owner == rid, (p, owner, rid)
+            del self._owner[p]
+            assert p not in self._free, p
+            self._free.append(p)
 
     def pages_of(self, rid: int) -> List[int]:
         return sorted(p for p, r in self._owner.items() if r == rid)

@@ -17,6 +17,28 @@ decodes with its own compacted FF weights from then on.  A preempted
 request is rescheduled recompute-style (pages freed, prefill restarts
 over prompt + generated-so-far) but keeps its compacted weights — the
 expert set stays the one chosen from the original prompt.
+
+Draft/verify phase (self-speculative decoding, see ARCHITECTURE.md):
+when the server runs a speculative tick instead of a one-token decode
+tick, the scheduler's role is page accounting only —
+
+* ``reserve_draft(req, k)`` grows the block table to cover the ``k``
+  draft positions plus the verify bonus position *without preemption*
+  (drafting is opportunistic; it must never evict a committed token's
+  pages, so on pool pressure the server falls back to vanilla decode);
+* the server commits accepted tokens through the ordinary
+  ``finish_decode_token`` path, one per token, so telemetry, ``done``
+  handling, and finish/free behavior are identical to vanilla decode;
+* ``rollback_draft(req)`` returns the unused draft tail to the pool via
+  ``BlockAllocator.free_pages``, leaving allocator state and block
+  table bit-identical to a history that never drafted (the invariant
+  ``tests/test_speculative.py`` checks; see ``free_pages`` for the
+  exact scope of the free-list-order part of that claim).
+
+KV written at rejected draft positions is left in place: it sits at
+positions ``>= cache_len``, which every reader masks out and the next
+committed token overwrites (page lifecycle contract in
+``serving/paged.py``).
 """
 from __future__ import annotations
 
@@ -265,6 +287,42 @@ class Scheduler:
         if plan.prefill is not None and plan.prefill.req is not self.prefilling:
             plan.prefill = None  # evicted by a better decoder's growth
         return plan
+
+    # -- speculative drafting (page accounting only; see module docstring) --
+    def reserve_draft(self, req: ScheduledRequest, k: int) -> bool:
+        """Grow ``req``'s block table to cover its ``k`` draft positions
+        plus the verify bonus position (``cache_len + k + 1`` tokens
+        total), **without preemption** — drafting is opportunistic and
+        must not evict anyone.  All-or-nothing; returns success."""
+        assert req.state == DECODING, req.state
+        need = req.table.pages_needed(req.cache_len + k + 1,
+                                      self.pcfg.page_size)
+        if need == 0:
+            return True
+        if req.cache_len + k + 1 > self.pcfg.max_request_len:
+            return False  # block table cannot address the draft tail
+        if not self.alloc.can_alloc(need):
+            return False
+        req.table.pages.extend(self.alloc.alloc(req.rid, need))
+        return True
+
+    def rollback_draft(self, req: ScheduledRequest) -> None:
+        """Free the draft pages not needed by committed tokens.
+
+        After the verify commit, exactly ``cache_len`` tokens of KV are
+        live (the newest generated token has not been consumed yet) —
+        the same coverage a vanilla decode history would hold between
+        ticks.  The tail beyond that is returned via ``free_pages``,
+        which restores the free list exactly (see the scope note
+        there).  No-op for finished requests (``_finish`` already freed
+        everything)."""
+        if req.state != DECODING:
+            return
+        keep = -(-req.cache_len // self.pcfg.page_size)
+        extra = req.table.pages[keep:]
+        if extra:
+            self.alloc.free_pages(req.rid, extra)
+            del req.table.pages[keep:]
 
     # -- completion callbacks (driven by the server) -----------------------
     def finish_prefill_chunk(self, work: PrefillWork,

@@ -4,15 +4,52 @@ Execution model per ``step()`` (one scheduler tick):
 
   1. at most one prefill chunk of the highest-priority admitted request
      runs through the full model (GRIFFIN stats streamed per chunk),
-  2. the decode batch advances every DECODING request by one token in a
-     single jitted call over ``n_slots`` padded slots (per-slot
-     positions, block tables, and — with GRIFFIN — per-slot compacted
-     FF weights).
+  2. the decode batch advances every DECODING request — by one token in
+     a single jitted call over ``n_slots`` padded slots (vanilla), or
+     by up to ``spec_k + 1`` tokens per request in a speculative
+     draft/verify tick (below).
 
 Both phases share the per-layer KV page pools; all host state (block
 tables, positions, tokens) lives in the scheduler's request objects.
-Shapes are static ([1, prefill_chunk] and [n_slots, 1]) so exactly two
-decode-path programs are ever compiled.
+Shapes are static ([1, prefill_chunk], [n_slots, 1], and — with
+``spec_k`` — [n_slots, spec_k + 1]) so at most three decode-path
+programs are ever compiled.
+
+Self-speculative decoding (``spec_k > 0``, requires ``gcfg``): the
+GRIFFIN-compacted per-request FF weights already installed in each
+decode slot double as a weight-sharing draft model — the paper's
+flocking result says the 50%-FF model is nearly loss-free within a
+sequence, so its greedy continuations usually match the dense model's.
+One speculative tick per decode batch:
+
+  1. **plan + reserve** — each planned request gets a draft length
+     ``k_r = min(spec_k, remaining_budget - 1, capacity headroom)`` and
+     pre-reserves pages for its ``k_r`` draft positions + 1 bonus
+     position, without preemption (``Scheduler.reserve_draft``); a
+     request that cannot reserve (pool pressure) drafts 0 tokens and
+     its verify row degenerates to a vanilla dense decode step.  Only
+     when nobody can draft does the whole tick fall back to one-token
+     *dense* decode — with ``spec_k`` the compacted weights are only
+     ever the draft, so fallback ticks must not use them.
+  2. **draft** — up to ``max(k_r)`` iterations of the ordinary
+     ``[n_slots, 1]`` decode program *with the per-slot compacted
+     weights*, each writing draft KV and extending each request's
+     draft chain greedily (requests past their own ``k_r`` mask out).
+  3. **verify** — one ``[n_slots, spec_k + 1]`` dense pass
+     (``decoder.verify_step_paged``) re-scores the last committed token
+     plus each request's drafts (rows masked to ``k_r + 1``),
+     overwriting draft KV with dense KV at every position it touches.
+  4. **commit + rollback** — the greedy acceptance walk
+     (``sampling.greedy_verify``) commits accepted drafts plus one
+     correction/bonus token through the ordinary scheduler callbacks;
+     ``Scheduler.rollback_draft`` returns unused draft pages so
+     allocator state is bit-identical to never having drafted.
+
+Greedy speculative output is token-identical to vanilla *dense* greedy
+decode (``gcfg=None``) — with ``spec_k`` the compacted weights are an
+accelerator, not an approximation.  Acceptance-rate / draft-efficiency
+telemetry lands in ``serving/metrics.py``; the wall-clock comparison is
+``benchmarks/run.py --only speculative``.
 """
 from __future__ import annotations
 
@@ -25,6 +62,7 @@ import numpy as np
 
 from repro.core import griffin as griffin_lib
 from repro.models import decoder
+from repro.serving import sampling
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged import PagedConfig
 from repro.serving.scheduler import (
@@ -47,6 +85,7 @@ class PagedServer:
         n_slots: int = 4,
         prefill_chunk: int = 32,
         max_len: int = 256,
+        spec_k: int = 0,
         metrics: Optional[ServingMetrics] = None,
     ):
         assert decoder.supports_paged(cfg), (
@@ -60,6 +99,12 @@ class PagedServer:
             max_pages_per_request=-(-max_len // page_size),
         )
         self.n_slots = n_slots
+        if spec_k and self.gcfg is None:
+            raise ValueError(
+                "spec_k needs gcfg: the GRIFFIN-compacted weights are the "
+                "draft model"
+            )
+        self.spec_k = spec_k
         self.sched = Scheduler(self.pcfg, n_slots, prefill_chunk,
                                metrics=metrics)
         self.pools = decoder.init_paged_pools(cfg, num_pages, page_size)
@@ -83,6 +128,13 @@ class PagedServer:
 
         self._decode = jax.jit(dec)
 
+        def verify(params, pools, bts, toks, pos, mask):
+            return decoder.verify_step_paged(
+                params, cfg, pools, bts, toks, pos, mask
+            )
+
+        self._verify = jax.jit(verify)
+
     # -- API ---------------------------------------------------------------
     @property
     def metrics(self) -> ServingMetrics:
@@ -102,7 +154,11 @@ class PagedServer:
         if plan.prefill is not None:
             self._run_prefill(plan.prefill)
         if plan.decode:
-            self._run_decode(plan.decode)
+            ks = self._plan_spec(plan.decode) if self.spec_k else None
+            if ks:
+                self._run_speculative(plan.decode, ks)
+            else:
+                self._run_decode(plan.decode)
         self.sched.metrics.on_step(self.sched.pool_in_use_frac(),
                                    len(plan.decode))
         return self.sched.has_work
@@ -126,9 +182,13 @@ class PagedServer:
         pos = np.array([work.start], np.int32)
         collect = work.collect_stats and self.gcfg is not None
         # resume of a compacted request: generated-token positions must
-        # rebuild their KV with the same compacted FF weights that decoded
-        # them, or the restored cache (and all post-resume logits) diverge
-        pruned = self._expand_b1(req.pruned_host) if work.use_pruned else None
+        # rebuild their KV with the same FF weights that decoded them, or
+        # the restored cache (and all post-resume logits) diverge.  In
+        # vanilla GRIFFIN mode that is the request's compacted weights; in
+        # speculative mode every committed token came from the *dense*
+        # verifier, so the rebuild must stay dense too.
+        use_pruned = work.use_pruned and not self.spec_k
+        pruned = self._expand_b1(req.pruned_host) if use_pruned else None
         logits, self.pools, stats = self._prefill(
             self.params, self.pools, jnp.asarray(bt), jnp.asarray(toks),
             jnp.asarray(pos), jnp.asarray(mask), pruned, collect,
@@ -163,7 +223,11 @@ class PagedServer:
             pos[s] = req.cache_len
             mask[s, 0] = True
             bts[s] = req.table.as_array(W)
-        pruned = self.pruned_slots if self.gcfg is not None else None
+        # spec mode: the compacted weights are only the *draft* — a
+        # vanilla tick (pool-pressure fallback) must decode dense, or its
+        # tokens and KV diverge from the dense stream the verifier commits
+        pruned = self.pruned_slots \
+            if (self.gcfg is not None and not self.spec_k) else None
         logits, self.pools = self._decode(
             self.params, self.pools, jnp.asarray(bts), jnp.asarray(toks),
             jnp.asarray(pos), jnp.asarray(mask), pruned,
@@ -171,6 +235,113 @@ class PagedServer:
         logits = np.asarray(logits)  # [slots, 1, V]
         for req in reqs:
             self.sched.finish_decode_token(req, int(np.argmax(logits[req.slot, 0])))
+
+    # -- speculative draft / verify / commit / rollback --------------------
+    def _plan_spec(self, reqs: List[ScheduledRequest]) -> Optional[Dict[int, int]]:
+        """Per-request draft lengths for a speculative tick, pages
+        reserved.
+
+        ``k_r = min(spec_k, remaining_budget - 1, capacity headroom)``
+        — drafting past a request's ``max_new`` or block-table capacity
+        is pure waste, and one constrained request must not disable
+        speculation for the whole batch.  A request whose reservation
+        fails (pool pressure) drafts 0 tokens this round: its verify
+        row then contains only its last committed token, which makes
+        that row exactly a vanilla dense decode step, already covered
+        by ``plan_step``'s page guarantee.  Returns ``rid -> k_r``, or
+        None when nobody can draft (the tick runs vanilla)."""
+        if not all(r.compacted for r in reqs):
+            return None
+        ks: Dict[int, int] = {}
+        for r in reqs:
+            k = min(self.spec_k,
+                    r.max_new - len(r.generated) - 1,
+                    self.pcfg.max_request_len - r.cache_len - 1)
+            k = max(0, k)
+            if k and not self.sched.reserve_draft(r, k):
+                k = 0
+            ks[r.rid] = k
+        if not any(ks.values()):
+            return None
+        return ks
+
+    def _run_speculative(self, reqs: List[ScheduledRequest],
+                         ks: Dict[int, int]) -> None:
+        """One draft/verify/commit/rollback round for the decode batch
+        (per-request draft lengths + pages planned by ``_plan_spec``)."""
+        K = self.spec_k
+        B, W = self.n_slots, self.pcfg.max_pages_per_request
+        bts = np.full((B, W), -1, np.int32)
+        base = {}
+        last = {}
+        draft: Dict[int, List[int]] = {}
+        for req in reqs:
+            bts[req.slot] = req.table.as_array(W)
+            base[req.rid] = req.cache_len
+            last[req.rid] = req.generated[-1]
+            draft[req.rid] = []
+        bts_j = jnp.asarray(bts)
+
+        # draft: greedy steps with the per-slot compacted weights; a
+        # request past its own k_r masks out (write -> trash page)
+        for i in range(max(ks.values())):
+            toks = np.zeros((B, 1), np.int32)
+            pos = np.zeros((B,), np.int32)
+            mask = np.zeros((B, 1), bool)
+            for req in reqs:
+                s = req.slot
+                toks[s, 0] = last[req.rid]
+                pos[s] = base[req.rid] + i
+                mask[s, 0] = i < ks[req.rid]
+            logits, self.pools = self._decode(
+                self.params, self.pools, bts_j, jnp.asarray(toks),
+                jnp.asarray(pos), jnp.asarray(mask), self.pruned_slots,
+            )
+            logits = np.asarray(logits)
+            for req in reqs:
+                if i < ks[req.rid]:
+                    t = int(np.argmax(logits[req.slot, 0]))
+                    draft[req.rid].append(t)
+                    last[req.rid] = t
+
+        # verify: one dense pass over last committed token + each
+        # request's drafts (static [B, K+1] shape, rows masked to k_r+1)
+        vtoks = np.zeros((B, K + 1), np.int32)
+        vpos = np.zeros((B,), np.int32)
+        vmask = np.zeros((B, K + 1), bool)
+        for req in reqs:
+            s, kr = req.slot, ks[req.rid]
+            vtoks[s, 0] = req.generated[-1]
+            vtoks[s, 1 : kr + 1] = draft[req.rid]
+            vpos[s] = base[req.rid]
+            vmask[s, : kr + 1] = True
+        vlogits, self.pools = self._verify(
+            self.params, self.pools, bts_j, jnp.asarray(vtoks),
+            jnp.asarray(vpos), jnp.asarray(vmask),
+        )
+        vlogits = np.asarray(vlogits)  # [slots, K+1, V]
+
+        # commit accepted tokens through the vanilla callbacks
+        for req in reqs:
+            kr = ks[req.rid]
+            committed, n_acc = sampling.greedy_verify(
+                vlogits[req.slot, : kr + 1], draft[req.rid]
+            )
+            n_commit = 0
+            for tok in committed:
+                if req.done:
+                    break
+                self.sched.finish_decode_token(req, tok)
+                n_commit += 1
+            if kr:
+                self.sched.metrics.on_spec_round(
+                    req.rid, drafted=kr, accepted=n_acc, committed=n_commit
+                )
+        # return unused draft tails in reverse reservation order, so
+        # the rollbacks unwind the allocator's LIFO stack exactly (see
+        # BlockAllocator.free_pages for the bit-identity scope)
+        for req in reversed(reqs):
+            self.sched.rollback_draft(req)
 
     # -- per-slot GRIFFIN weights ------------------------------------------
     def _expand_b1(self, pruned1: Dict) -> Dict:

@@ -93,8 +93,8 @@ def test_analytic_cell_costs_positive_all_cells():
 
 def test_griffin_roofline_regime_shift():
     """The paper's regime (B=1, short ctx) is weight-dominated; the big
-    decode_32k shape is cache-dominated — DESIGN.md section / EXPERIMENTS
-    section Roofline claim."""
+    decode_32k shape is cache-dominated — the EXPERIMENTS.md section
+    Roofline regime-shift claim."""
     from repro.configs.shapes import ShapeConfig
 
     cfg = get_config("yi-9b")
