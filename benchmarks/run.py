@@ -439,6 +439,118 @@ def bench_speculative(smoke: bool = False) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Prefix cache: shared-prefix reuse under a Zipf-shared Poisson trace
+# ---------------------------------------------------------------------------
+
+def bench_prefix(smoke: bool = False) -> None:
+    """Shared-prefix paged-KV reuse (radix cache + COW) vs cold serving.
+
+    The trace models chat traffic: every prompt is one of a few system
+    prompts (picked Zipf-distributed, so one dominates) plus a unique
+    user suffix, arriving Poisson.  The same trace runs through a cold
+    server (``prefix_cache=False``) and a prefix-warm one (cache
+    pre-populated by one request per system prompt); outputs must be
+    token-identical.  Reported per mode: tokens/sec, TTFT p50/p95,
+    prefix hit rate, saved prefill tokens, COW copies — plus the
+    ISSUE's headline number, TTFT p50 of *prefix-hit* requests vs the
+    cold p50 (each saved chunk is a whole model call, so hits see
+    first tokens sooner).
+    """
+    from repro.data.pipeline import SyntheticCorpus
+    from repro.serving.server import PagedServer
+
+    cfg, params = trained_tiny(steps=120 if smoke else 500)
+    corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
+    n_sys, n_req = 3, (10 if smoke else 24)
+    # moderate load: arrivals must not saturate the decode slots, or
+    # TTFT is all backlog wait and the prefill savings drown in it
+    mean_gap_s = 0.08 if smoke else 0.3
+    rng = np.random.default_rng(23)
+    # system prompts: multiples of prefill_chunk so the shared head is
+    # fully covered by chunk-boundary trie nodes; long enough that a
+    # hit skips 3 of ~4 prefill chunks (each chunk is one model call)
+    sys_prompts = [corpus.sample(96, seed=7000 + i) for i in range(n_sys)]
+    zipf = 1.0 / np.arange(1, n_sys + 1) ** 1.5
+    zipf /= zipf.sum()
+    trace = [
+        (
+            float(t),
+            np.concatenate([
+                sys_prompts[int(rng.choice(n_sys, p=zipf))],
+                corpus.sample(int(rng.integers(4, 16)), seed=8000 + i),
+            ]),
+            int(rng.integers(6, 16)),
+        )
+        for i, t in enumerate(np.cumsum(rng.exponential(mean_gap_s, n_req)))
+    ]
+
+    outputs, summaries = {}, {}
+    for mode, pc in (("cold", False), ("prefix", True)):
+        srv = PagedServer(cfg, params, gcfg=GriffinConfig(
+            sparsity=0.5, per_shard_topk=False), page_size=16, num_pages=96,
+            n_slots=4, prefill_chunk=32, max_len=128, prefix_cache=pc)
+        for j, sp in enumerate(sys_prompts):  # warm-up (no-op when cold)
+            srv.submit(sp, max_new=2, rid=9000 + j)
+        srv.drain()
+        t0 = time.perf_counter()
+        pending = list(trace)
+        rid = 0
+        while pending or srv.sched.has_work:
+            now = time.perf_counter() - t0
+            while pending and pending[0][0] <= now:
+                _, prompt, gen = pending.pop(0)
+                srv.submit(prompt, max_new=gen, rid=rid)
+                rid += 1
+            if not srv.step() and pending:
+                time.sleep(max(0.0, pending[0][0] - (time.perf_counter() - t0)))
+        wall = time.perf_counter() - t0
+        outputs[mode] = {r: t for r, t in srv.drain().items() if r < 9000}
+        m = srv.metrics.summary()
+        from repro.serving.metrics import percentile
+
+        hit_ttfts = [r.ttft for r in srv.metrics.requests.values()
+                     if r.rid < 9000 and r.prefix_hit_tokens > 0
+                     and r.ttft is not None]
+        summaries[mode] = {
+            "wall_s": wall,
+            "tokens_per_sec": m["tokens_per_sec"],
+            "ttft_p50_s": m["ttft_p50_s"],
+            "ttft_p95_s": m["ttft_p95_s"],
+            "ttft_hit_p50_s": percentile(hit_ttfts, 50),
+            "prefix_hit_rate": m["prefix_hit_rate"],
+            "saved_prefill_tokens": m["saved_prefill_tokens"],
+            "cow_copies": m["cow_copies"],
+            "shared_pages_mean": m["shared_pages_mean"],
+            "preemptions": m["preemptions"],
+        }
+        emit(
+            f"prefix_{mode}", wall * 1e6,
+            f"n={n_req} tok/s={m['tokens_per_sec']:.1f} "
+            f"ttft_p50={m['ttft_p50_s']:.3f}s "
+            f"hit_rate={m['prefix_hit_rate']:.2f} "
+            f"saved_tokens={m['saved_prefill_tokens']:.0f} "
+            f"cow={m['cow_copies']:.0f}",
+        )
+    identical = outputs["cold"] == outputs["prefix"]
+    hit_p50 = summaries["prefix"]["ttft_hit_p50_s"]
+    cold_p50 = summaries["cold"]["ttft_p50_s"]
+    emit("prefix_hit_ttft_vs_cold", 0.0,
+         f"hit_p50={hit_p50:.3f}s cold_p50={cold_p50:.3f}s "
+         f"token_identical={identical}")
+    record("smoke", bool(smoke))
+    record("modes", summaries)
+    record("token_identical", bool(identical))
+    record("hit_ttft_p50_below_cold", bool(hit_p50 < cold_p50))
+    assert identical, "prefix-warm serving diverged from cold serving"
+    # the timing claim is asserted only on the full trace: the smoke
+    # trace (CI, shared runners) is small enough that a noisy-neighbor
+    # stall could flip a wall-clock comparison with no code defect —
+    # there it is recorded (hit_ttft_p50_below_cold), not enforced
+    if not smoke:
+        assert hit_p50 < cold_p50, (hit_p50, cold_p50)
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from dry-run artifacts
 # ---------------------------------------------------------------------------
 
@@ -476,6 +588,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "serving": bench_serving,
     "speculative": bench_speculative,
+    "prefix": bench_prefix,
     "roofline": bench_roofline_table,
 }
 

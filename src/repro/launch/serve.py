@@ -43,6 +43,10 @@ def main() -> None:
                     help="self-speculative decoding: tokens drafted per "
                          "verify with the GRIFFIN-compacted weights "
                          "(requires GRIFFIN; output stays dense-exact)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable shared-prefix paged-KV reuse (radix "
+                         "cache + copy-on-write pages; output is "
+                         "token-identical either way)")
     ap.add_argument("--ckpt-dir", default="artifacts/models/tinylm-s500")
     args = ap.parse_args()
 
@@ -85,7 +89,7 @@ def main() -> None:
             cfg, params, gcfg=gcfg, page_size=args.page_size,
             num_pages=args.num_pages, n_slots=args.slots,
             prefill_chunk=args.prefill_chunk, max_len=args.max_len,
-            spec_k=args.spec_k,
+            spec_k=args.spec_k, prefix_cache=not args.no_prefix_cache,
         )
         for rid, (prompt, gen) in enumerate(reqs):
             srv.submit(prompt, max_new=gen, rid=rid)
@@ -99,6 +103,11 @@ def main() -> None:
         print(f"  ttft p50={m['ttft_p50_s']:.3f}s p95={m['ttft_p95_s']:.3f}s "
               f"occupancy={m['pool_occupancy_mean']:.0%} "
               f"preemptions={m['preemptions']:.0f}")
+        if not args.no_prefix_cache:
+            print(f"  prefix: hit_rate={m['prefix_hit_rate']:.2f} "
+                  f"saved_tokens={m['saved_prefill_tokens']:.0f} "
+                  f"cow={m['cow_copies']:.0f} "
+                  f"shared_pages={m['shared_pages_mean']:.1f}")
         if args.spec_k:
             print(f"  spec: acceptance={m['acceptance_rate']:.3f} "
                   f"tokens/verify={m['tokens_per_verify']:.2f} "

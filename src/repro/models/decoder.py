@@ -26,6 +26,7 @@ Public API (all pure, jit-friendly; ``cfg`` static):
     decode_step(params, cfg, cache, token, pos, pruned=None) -> logits, cache
     decode_step_paged(params, cfg, pools, bt, tokens, pos, ...) -> logits, pools, stats
     verify_step_paged(params, cfg, pools, bt, tokens, pos, mask) -> logits, pools
+    copy_pool_pages(cfg, pools, src, dst)    -> pools (COW page forks)
     extract_ffn_tree(params, cfg)            -> tree of dense-FF params
 """
 from __future__ import annotations
@@ -669,6 +670,36 @@ def init_paged_pools(cfg, num_pages: int, page_size: int) -> Dict:
         paged_pool_specs(cfg, num_pages, page_size), jax.random.PRNGKey(0),
         cfg.dtype,
     )
+
+
+def copy_pool_pages(cfg, pools: Dict, src: jax.Array,
+                    dst: jax.Array) -> Dict:
+    """Copy whole KV pages ``src[i] -> dst[i]`` in every layer pool.
+
+    The device half of copy-on-write: the allocator moved a writer's
+    reference onto a fresh page (``BlockAllocator.cow``), and this
+    copies the shared page's bits there so the writer's history stays
+    bit-identical while the original page remains frozen for its other
+    holders.  ``src``/``dst`` come from the scheduler's ``StepPlan.cow``
+    pairs; pair order is irrelevant (dst pages are always fresh, so no
+    pair reads another's dst).  Pure and jit-friendly — the server jits
+    it with the pools donated so XLA can update buffers in place
+    instead of copying every pool to move one page.
+    """
+    out: Dict[str, Any] = {}
+    for i, seg in enumerate(build_plan(cfg)):
+        key = f"seg{i}"
+        # page axis: 0 for unrolled layers, 1 behind the stacked layer
+        # axis for scan segments (same convention as every pool buffer)
+        ax = 1 if seg.kind == "scan" else 0
+
+        def cp(buf, _ax=ax):
+            taken = jnp.take(buf, src, axis=_ax)
+            return buf.at[dst].set(taken) if _ax == 0 \
+                else buf.at[:, dst].set(taken)
+
+        out[key] = jax.tree.map(cp, pools[key])
+    return out
 
 
 def _apply_layer_paged(

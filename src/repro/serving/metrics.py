@@ -12,6 +12,15 @@ fraction of drafted tokens the dense model kept; ``tokens_per_verify``
 number that converts directly into decode-step amortization: each
 round replaces ``committed`` vanilla dense steps with ``k`` cheap
 draft steps + 1 dense verify.
+
+Prefix-cache counters: ``prefix_hit_rate`` is the fraction of admission
+lookups that matched a cached prefix; ``saved_prefill_tokens`` counts
+prompt tokens whose prefill (and GRIFFIN stat accumulation) was skipped
+because cached pages carried them; ``cow_copies`` counts copy-on-write
+page forks (each is one device page copy); ``shared_pages_mean`` tracks
+how many pool pages are multiply-referenced per step.  Per-request,
+``prefix_hit_tokens`` records the matched prefix length — the warm/cold
+TTFT split in ``benchmarks/run.py --only prefix`` comes from it.
 """
 from __future__ import annotations
 
@@ -38,6 +47,8 @@ class RequestTimeline:
     draft_tokens: int = 0
     accepted_draft_tokens: int = 0
     spec_rounds: int = 0
+    prefix_hit_tokens: int = 0  # prompt tokens served from cached pages
+    cow_copies: int = 0
 
     @property
     def queue_time(self) -> Optional[float]:
@@ -83,6 +94,14 @@ class ServingMetrics:
     draft_tokens: int = 0
     accepted_draft_tokens: int = 0
     spec_committed_tokens: int = 0
+    # prefix cache (radix trie over prompt prefixes, serving/prefix.py)
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    saved_prefill_tokens: int = 0
+    prefix_inserts: int = 0
+    prefix_evictions: int = 0
+    cow_copies: int = 0
+    shared_pages: List[int] = field(default_factory=list)  # per-step gauge
 
     # -- request lifecycle -------------------------------------------------
     def on_submit(self, rid: int, prompt_tokens: int, priority: int = 0) -> None:
@@ -132,13 +151,40 @@ class ServingMetrics:
         self.requests[rid].preemptions += 1
         self.preemptions += 1
 
+    # -- prefix cache ------------------------------------------------------
+    def on_prefix_lookup(self, rid: int, hit_tokens: int) -> None:
+        """One admission-time trie lookup; ``hit_tokens`` > 0 is a hit
+        (that many prompt tokens skip prefill)."""
+        self.prefix_lookups += 1
+        if hit_tokens > 0:
+            self.prefix_hits += 1
+            self.saved_prefill_tokens += hit_tokens
+            r = self.requests.get(rid)
+            if r is not None:
+                r.prefix_hit_tokens = max(r.prefix_hit_tokens, hit_tokens)
+
+    def on_prefix_insert(self, rid: int, tokens: int) -> None:
+        self.prefix_inserts += 1
+
+    def on_prefix_evict(self, refs_released: int) -> None:
+        self.prefix_evictions += 1
+
+    def on_cow(self, rid: int) -> None:
+        """One copy-on-write page fork (one device page copy)."""
+        self.cow_copies += 1
+        r = self.requests.get(rid)
+        if r is not None:
+            r.cow_copies += 1
+
     # -- per-step gauges ---------------------------------------------------
-    def on_step(self, pool_in_use_frac: float, decode_batch: int) -> None:
+    def on_step(self, pool_in_use_frac: float, decode_batch: int,
+                shared_pages: int = 0) -> None:
         self.steps += 1
         if decode_batch:
             self.decode_steps += 1
         self.pool_occupancy.append(pool_in_use_frac)
         self.decode_batch_sizes.append(decode_batch)
+        self.shared_pages.append(shared_pages)
 
     # -- aggregation -------------------------------------------------------
     def summary(self) -> Dict[str, float]:
@@ -173,4 +219,12 @@ class ServingMetrics:
             if self.draft_tokens else 0.0,
             "tokens_per_verify": self.spec_committed_tokens / self.spec_rounds
             if self.spec_rounds else 0.0,
+            "prefix_hit_rate": self.prefix_hits / self.prefix_lookups
+            if self.prefix_lookups else 0.0,
+            "saved_prefill_tokens": float(self.saved_prefill_tokens),
+            "prefix_inserts": float(self.prefix_inserts),
+            "prefix_evictions": float(self.prefix_evictions),
+            "cow_copies": float(self.cow_copies),
+            "shared_pages_mean": float(np.mean(self.shared_pages))
+            if self.shared_pages else 0.0,
         }

@@ -39,6 +39,18 @@ KV written at rejected draft positions is left in place: it sits at
 positions ``>= cache_len``, which every reader masks out and the next
 committed token overwrites (page lifecycle contract in
 ``serving/paged.py``).
+
+Prefix cache (``serving/prefix.py``, enabled per server): admission
+matches the prompt against the radix trie — on a hit the matched pages
+are forked into the request's block table, the cached ``s_sq`` partial
+is pre-loaded, and prefill starts at the first token past the match.
+Because shared pages are read-only, every planned write whose first
+position lands in a shared page gets a copy-on-write pair
+(``StepPlan.cow``) that the server applies to the device pools
+(``decoder.copy_pool_pages``) before running the step.  When a prompt's
+prefill completes, its pages + statistic are published back into the
+trie; under pool pressure the trie evicts LRU leaves *before* any live
+request is preempted.
 """
 from __future__ import annotations
 
@@ -50,6 +62,7 @@ import numpy as np
 
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged import BlockAllocator, BlockTable, PagedConfig
+from repro.serving.prefix import PrefixCache
 
 QUEUED, PREFILLING, DECODING, FINISHED = "queued", "prefilling", "decoding", "finished"
 
@@ -110,6 +123,10 @@ class PrefillWork:
 class StepPlan:
     prefill: Optional[PrefillWork] = None
     decode: List[ScheduledRequest] = field(default_factory=list)
+    # copy-on-write page forks the server must apply to the device
+    # pools (src -> dst, decoder.copy_pool_pages) before this step's
+    # writes — block tables already point at the dst pages
+    cow: List[Tuple[int, int]] = field(default_factory=list)
 
     @property
     def empty(self) -> bool:
@@ -123,12 +140,19 @@ class Scheduler:
         n_slots: int,
         prefill_chunk: int = 32,
         metrics: Optional[ServingMetrics] = None,
+        prefix_cache: bool = False,
     ):
         self.pcfg = pcfg
         self.alloc = BlockAllocator(pcfg.num_pages)
         self.n_slots = n_slots
         self.prefill_chunk = prefill_chunk
         self.metrics = metrics if metrics is not None else ServingMetrics()
+        self.prefix = PrefixCache(self.alloc, pcfg.page_size) \
+            if prefix_cache else None
+        # set by the server when GRIFFIN is active: only stat-carrying
+        # trie nodes may serve a request that still needs to select its
+        # experts, and stat-less prompts are not published
+        self.needs_stats = False
         self._seq = itertools.count()
         self.queue: List[ScheduledRequest] = []
         self.prefilling: Optional[ScheduledRequest] = None
@@ -207,17 +231,87 @@ class Scheduler:
         self.queue.append(victim)
         self.metrics.on_preemption(victim.rid)
 
+    def _reclaim(self, needy: ScheduledRequest, need: int) -> bool:
+        """Free pool pages until ``need`` are allocatable: reclaimable
+        LRU prefix-cache leaves first (pure cache, nothing recomputes),
+        then preemption-by-eviction — which drops co-holds and can make
+        further cache leaves reclaimable, so the loop interleaves the
+        two rather than wiping the cache up front.  Returns success."""
+        while not self.alloc.can_alloc(need):
+            if self.prefix is not None:
+                released = self.prefix.evict_one()
+                if released:
+                    self.metrics.on_prefix_evict(released)
+                    continue
+            if not self._preempt_one(needy):
+                return False
+        return True
+
     def _ensure_pages(self, req: ScheduledRequest, total_tokens: int) -> bool:
         """Grow ``req``'s block table to cover ``total_tokens``,
-        preempting decoders if the pool is exhausted.  Returns success."""
+        reclaiming (cache eviction, then preemption) if the pool is
+        exhausted.  Returns success."""
         need = req.table.pages_needed(total_tokens, self.pcfg.page_size)
         if need == 0:
             return True
-        while not self.alloc.can_alloc(need):
-            if not self._preempt_one(req):
-                return False
+        if len(req.table.pages) + need > self.alloc.num_pages:
+            # cannot fit even in an exclusively-owned pool: fail before
+            # reclaim flushes the cache and preempts everyone for nothing
+            return False
+        if not self._reclaim(req, need):
+            return False
         req.table.pages.extend(self.alloc.alloc(req.rid, need))
         return True
+
+    def _cow_for_write(self, req: ScheduledRequest,
+                       pos: int) -> Optional[List[Tuple[int, int]]]:
+        """Make the page holding position ``pos`` exclusively ``req``'s.
+
+        Writes may only land in exclusive pages (lifecycle contract in
+        ``serving/paged.py``); the page containing the first written
+        position is the only one that can be shared — later pages are
+        fresh ``alloc``s.  Returns the (src, dst) device-copy pairs to
+        apply (empty when already exclusive), or None when no page can
+        be reclaimed for the copy (caller stalls/aborts like an
+        ``_ensure_pages`` failure)."""
+        idx = pos // self.pcfg.page_size
+        if idx >= len(req.table.pages):
+            return []
+        page = req.table.pages[idx]
+        if self.alloc.ref_count(page) <= 1:
+            return []
+        if not self._reclaim(req, 1):
+            return None
+        new = self.alloc.cow(req.rid, page)
+        if new == page:
+            # reclaim evicted the last co-holder: already exclusive,
+            # no device copy needed
+            return []
+        req.table.pages[idx] = new
+        self.metrics.on_cow(req.rid)
+        return [(page, new)]
+
+    def _try_prefix_match(self, req: ScheduledRequest) -> None:
+        """Admission-time trie lookup: fork matched pages, pre-load the
+        cached ``s_sq`` partial, start prefill past the match."""
+        if self.prefix is None:
+            return
+        assert req.prefilled == 0 and not req.table.pages
+        # a request that still needs expert selection must resume with
+        # the exact statistic for the skipped tokens; compacted resumes
+        # (frozen expert set) reuse pages from any node
+        need_stats = self.needs_stats and not req.compacted
+        m = self.prefix.match(req.prompt, max_len=len(req.prompt) - 1,
+                              need_stats=need_stats)
+        self.metrics.on_prefix_lookup(req.rid,
+                                      hit_tokens=m.length if m else 0)
+        if m is None:
+            return
+        self.alloc.fork(m.pages, req.rid)
+        req.table.pages = list(m.pages)
+        req.prefilled = m.length
+        if need_stats:
+            req.s_sq_acc = m.s_sq
 
     def _abort(self, req: ScheduledRequest) -> None:
         self.alloc.free_request(req.rid)
@@ -231,6 +325,7 @@ class Scheduler:
     # -- planning ----------------------------------------------------------
     def plan_step(self) -> StepPlan:
         plan = StepPlan()
+        cow_tagged: List[Tuple[int, int, int]] = []  # (rid, src, dst)
 
         # admission: one request prefills at a time, highest priority first
         if self.prefilling is None and self.queue \
@@ -239,6 +334,7 @@ class Scheduler:
             self.queue.remove(req)
             req.state = PREFILLING
             self.prefilling = req
+            self._try_prefix_match(req)
 
         # chunked prefill: at most one chunk per step
         if self.prefilling is not None:
@@ -247,7 +343,12 @@ class Scheduler:
             start = req.prefilled
             P = len(req.prompt)
             end = min(start + self.prefill_chunk, P if start < P else len(toks))
-            if not self._ensure_pages(req, end):
+            # the chunk needs its pages, and its first written position
+            # may land in a shared prefix-boundary page -> COW
+            pairs = None
+            if self._ensure_pages(req, end):
+                pairs = self._cow_for_write(req, start)
+            if pairs is None:
                 if not self.decoding:
                     # nothing to evict and nothing will free pages: the
                     # request cannot ever fit
@@ -262,6 +363,7 @@ class Scheduler:
                     self._evict(req)
                 # else: stall the chunk; decoders drain and free pages
             else:
+                cow_tagged.extend((req.rid, s, d) for s, d in pairs)
                 plan.prefill = PrefillWork(
                     req, start, toks[start:end], is_last=end == len(toks),
                     collect_stats=not req.compacted,
@@ -269,24 +371,46 @@ class Scheduler:
                 )
 
         # decode batch: every decoding request advances one token; each
-        # needs its next page before its KV write at position cache_len
+        # needs its next page — exclusively — before its KV write at
+        # position cache_len
         stalled = []
         for req in list(self.decoding):
             if req.state != DECODING:  # preempted by an earlier iteration
                 continue
-            if not self._ensure_pages(req, req.cache_len + 1):
-                others = self.alloc.num_in_use - len(req.table.pages)
-                if others > 0:
-                    # strictly-better requests hold the pool; they will
-                    # finish and free pages — sit this batch out
+            pairs = None
+            if self._ensure_pages(req, req.cache_len + 1):
+                pairs = self._cow_for_write(req, req.cache_len)
+            if pairs is None:
+                # reclaim already evicted every reclaimable cache page,
+                # so any page still pinned belongs to a live request
+                if self._other_page_holders(req):
+                    # they will finish and free pages — sit this batch out
                     stalled.append(req)
                 else:  # alone in the pool and still does not fit
                     self._abort(req)
                     self.decoding.remove(req)
+            else:
+                cow_tagged.extend((req.rid, s, d) for s, d in pairs)
         plan.decode = [r for r in self.decoding if r not in stalled]
         if plan.prefill is not None and plan.prefill.req is not self.prefilling:
             plan.prefill = None  # evicted by a better decoder's growth
+        # drop COW pairs of requests that a later iteration evicted: an
+        # evicted request's dst page went back on the free list and may
+        # since have been recycled as another request's COW dst — a
+        # stale pair would then collide on that dst and the scatter
+        # winner is implementation-defined
+        keep = {r.rid for r in plan.decode}
+        if plan.prefill is not None:
+            keep.add(plan.prefill.req.rid)
+        plan.cow = [(s, d) for rid, s, d in cow_tagged if rid in keep]
         return plan
+
+    def _other_page_holders(self, req: ScheduledRequest) -> bool:
+        """Does any other live request currently hold pages?"""
+        others = list(self.decoding)
+        if self.prefilling is not None:
+            others.append(self.prefilling)
+        return any(r is not req and r.table.pages for r in others)
 
     # -- speculative drafting (page accounting only; see module docstring) --
     def reserve_draft(self, req: ScheduledRequest, k: int) -> bool:
@@ -331,6 +455,21 @@ class Scheduler:
         assert req is self.prefilling
         req.prefilled = work.start + len(work.tokens)
         self.metrics.on_prefill_chunk(req.rid)
+        P = len(req.prompt)
+        if self.prefix is not None and work.start < P:
+            # publish the prompt prefix covered so far (chunks never
+            # straddle the prompt boundary, so prefilled <= P here).
+            # Inserting at *every* chunk boundary — where the exact
+            # cumulative s_sq snapshot exists — is what lets a later
+            # prompt that diverges mid-prompt still reuse the shared
+            # head at chunk granularity.  A compacted resume
+            # accumulates no stats — skip it rather than publish a
+            # node stat-needing matches cannot use.
+            s_sq = req.s_sq_acc if not req.compacted else None
+            if s_sq is not None or not self.needs_stats:
+                if self.prefix.insert(req.prompt[: req.prefilled],
+                                      req.table.pages, s_sq) is not None:
+                    self.metrics.on_prefix_insert(req.rid, req.prefilled)
         if not work.is_last:
             return
         # prefill complete -> decode (TTFT token comes from prefill logits
@@ -369,3 +508,8 @@ class Scheduler:
 
     def pool_in_use_frac(self) -> float:
         return self.alloc.num_in_use / max(1, self.alloc.num_pages)
+
+    def flush_prefix(self) -> int:
+        """Drop every cached prefix (refs released; pages shared with
+        live requests stay until those requests free them)."""
+        return self.prefix.flush() if self.prefix is not None else 0

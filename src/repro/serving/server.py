@@ -2,12 +2,23 @@
 
 Execution model per ``step()`` (one scheduler tick):
 
+  0. copy-on-write page forks planned by the scheduler are applied to
+     the device pools (``decoder.copy_pool_pages``) — shared prefix
+     pages are read-only, so a writer first gets a private copy,
   1. at most one prefill chunk of the highest-priority admitted request
-     runs through the full model (GRIFFIN stats streamed per chunk),
+     runs through the full model (GRIFFIN stats streamed per chunk) —
+     with the prefix cache (``prefix_cache=True``, default) a request
+     whose prompt prefix is cached starts at the first divergent token
+     with the cached ``s_sq`` partial pre-loaded,
   2. the decode batch advances every DECODING request — by one token in
      a single jitted call over ``n_slots`` padded slots (vanilla), or
      by up to ``spec_k + 1`` tokens per request in a speculative
      draft/verify tick (below).
+
+Prefix reuse is bit-compatible: cached pages hold the very bits the
+donor prefill wrote, so warm decode is token-identical to cold decode
+(fuzzed in ``tests/test_prefix_cache.py``; mechanism in
+``serving/prefix.py`` and DESIGN.md section 9).
 
 Both phases share the per-layer KV page pools; all host state (block
 tables, positions, tokens) lives in the scheduler's request objects.
@@ -86,6 +97,7 @@ class PagedServer:
         prefill_chunk: int = 32,
         max_len: int = 256,
         spec_k: int = 0,
+        prefix_cache: bool = True,
         metrics: Optional[ServingMetrics] = None,
     ):
         assert decoder.supports_paged(cfg), (
@@ -106,7 +118,8 @@ class PagedServer:
             )
         self.spec_k = spec_k
         self.sched = Scheduler(self.pcfg, n_slots, prefill_chunk,
-                               metrics=metrics)
+                               metrics=metrics, prefix_cache=prefix_cache)
+        self.sched.needs_stats = self.gcfg is not None
         self.pools = decoder.init_paged_pools(cfg, num_pages, page_size)
         self.pruned_slots: Optional[Dict] = None  # per-slot compacted FF
         self._next_rid = 0
@@ -135,6 +148,13 @@ class PagedServer:
 
         self._verify = jax.jit(verify)
 
+        def cow_copy(pools, src, dst):
+            return decoder.copy_pool_pages(cfg, pools, src, dst)
+
+        # pools donated: XLA updates the page buffers in place rather
+        # than materializing a full copy of every pool per COW tick
+        self._cow_copy = jax.jit(cow_copy, donate_argnums=(0,))
+
     # -- API ---------------------------------------------------------------
     @property
     def metrics(self) -> ServingMetrics:
@@ -151,6 +171,14 @@ class PagedServer:
     def step(self) -> bool:
         """One scheduler tick; returns True while work remains."""
         plan = self.sched.plan_step()
+        if plan.cow:
+            # copy-on-write forks: duplicate shared page bits into the
+            # writers' fresh pages before any of this tick's writes
+            self.pools = self._cow_copy(
+                self.pools,
+                jnp.asarray([s for s, _ in plan.cow], jnp.int32),
+                jnp.asarray([d for _, d in plan.cow], jnp.int32),
+            )
         if plan.prefill is not None:
             self._run_prefill(plan.prefill)
         if plan.decode:
@@ -160,7 +188,8 @@ class PagedServer:
             else:
                 self._run_decode(plan.decode)
         self.sched.metrics.on_step(self.sched.pool_in_use_frac(),
-                                   len(plan.decode))
+                                   len(plan.decode),
+                                   shared_pages=self.sched.alloc.num_shared)
         return self.sched.has_work
 
     def drain(self) -> Dict[int, List[int]]:

@@ -1,0 +1,219 @@
+"""Property/fuzz suite for the refcounted ``BlockAllocator``.
+
+The allocator is the trust anchor of the serving stack: every page the
+device writes is routed by block tables whose ids come from here, and
+the prefix cache multiplies how many owners can point at one page.  The
+suite drives random interleavings of the five lifecycle operations —
+``alloc`` / ``fork`` / ``cow`` / ``free_pages`` / ``free_request`` —
+against an independent model of who-holds-what, checking after *every*
+step that nothing leaks and nothing double-frees:
+
+    free + distinct(live owners' pages) == num_pages
+
+plus refcount-vs-holders agreement (``BlockAllocator.check``).
+
+Two drivers: a hypothesis ``RuleBasedStateMachine`` (shrinking,
+>=1000 examples, skipped when hypothesis is absent) and a seeded
+numpy random walk of the same rules that always runs, so tier-1 keeps
+fuzzing the invariant even on environments without hypothesis.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.paged import BlockAllocator
+
+N_PAGES = 24
+
+
+class AllocModel:
+    """Reference model: owner -> ordered page list, mirrored by hand."""
+
+    def __init__(self, alloc: BlockAllocator):
+        self.alloc = alloc
+        self.held = {}  # owner -> List[int]
+        self.next_owner = 0
+
+    # -- operations (each mirrors one allocator call) ----------------------
+    def op_alloc(self, n: int):
+        owner = self.next_owner
+        self.next_owner += 1
+        if not self.alloc.can_alloc(n):
+            with pytest.raises(MemoryError):
+                self.alloc.alloc(owner, n)
+            return
+        pages = self.alloc.alloc(owner, n)
+        assert len(pages) == n and len(set(pages)) == n
+        self.held[owner] = list(pages)
+
+    def op_fork(self, src_owner: int, k: int):
+        pages = self.held[src_owner][:k]
+        owner = self.next_owner
+        self.next_owner += 1
+        self.alloc.fork(pages, owner)
+        self.held[owner] = list(pages)
+
+    def op_cow(self, owner: int, idx: int):
+        page = self.held[owner][idx]
+        if self.alloc.ref_count(page) == 1:
+            assert self.alloc.cow(owner, page) == page
+            return
+        if self.alloc.num_free == 0:
+            with pytest.raises(MemoryError):
+                self.alloc.cow(owner, page)
+            return
+        new = self.alloc.cow(owner, page)
+        assert new != page and self.alloc.ref_count(new) == 1
+        self.held[owner][idx] = new
+
+    def op_free_tail(self, owner: int, k: int):
+        tail = self.held[owner][-k:]
+        self.alloc.free_pages(owner, tail)
+        del self.held[owner][-k:]
+
+    def op_free_request(self, owner: int):
+        n = self.alloc.free_request(owner)
+        assert n == len(self.held.pop(owner))
+
+    # -- the conservation invariant ----------------------------------------
+    def check(self):
+        self.alloc.check()
+        live = {p for pages in self.held.values() for p in pages}
+        assert self.alloc.num_free + len(live) == N_PAGES
+        assert self.alloc.num_in_use == len(live)
+        for owner, pages in self.held.items():
+            assert self.alloc.pages_of(owner) == sorted(pages), owner
+
+    def owners_with_pages(self):
+        return sorted(o for o, ps in self.held.items() if ps)
+
+
+# ---------------------------------------------------------------------------
+# Seeded random walk (always runs, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+def _random_step(m: AllocModel, rng: np.random.Generator):
+    owners = m.owners_with_pages()
+    ops = ["alloc"]
+    if owners:
+        ops += ["fork", "cow", "free_tail", "free_request"]
+    op = ops[int(rng.integers(len(ops)))]
+    if op == "alloc":
+        m.op_alloc(int(rng.integers(1, 5)))
+    elif op == "fork":
+        o = owners[int(rng.integers(len(owners)))]
+        m.op_fork(o, int(rng.integers(1, len(m.held[o]) + 1)))
+    elif op == "cow":
+        o = owners[int(rng.integers(len(owners)))]
+        m.op_cow(o, int(rng.integers(len(m.held[o]))))
+    elif op == "free_tail":
+        o = owners[int(rng.integers(len(owners)))]
+        m.op_free_tail(o, int(rng.integers(1, len(m.held[o]) + 1)))
+    else:
+        o = owners[int(rng.integers(len(owners)))]
+        m.op_free_request(o)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_allocator_random_walk_conserves_pages(seed):
+    rng = np.random.default_rng(seed)
+    m = AllocModel(BlockAllocator(N_PAGES))
+    for _ in range(400):
+        _random_step(m, rng)
+        m.check()
+    for o in list(m.held):
+        m.op_free_request(o)
+    m.check()
+    assert m.alloc.num_free == N_PAGES  # nothing leaked
+
+
+def test_exclusive_tail_rollback_restores_free_list_exactly():
+    """Draft-style cycles at random depths: allocating a tail and
+    rolling it back must leave the free *list* (order included)
+    bit-identical — on a pool already fragmented by refcounted churn."""
+    rng = np.random.default_rng(123)
+    m = AllocModel(BlockAllocator(N_PAGES))
+    for _ in range(100):
+        _random_step(m, rng)
+    for _ in range(50):
+        owners = m.owners_with_pages()
+        if not owners or m.alloc.num_free == 0:
+            _random_step(m, rng)
+            continue
+        o = owners[int(rng.integers(len(owners)))]
+        k = int(rng.integers(1, m.alloc.num_free + 1))
+        before = list(m.alloc._free)
+        tail = m.alloc.alloc(o, k)
+        m.alloc.free_pages(o, tail)
+        assert m.alloc._free == before
+        m.check()
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis stateful machine (shrinking; >=1000 examples)
+# ---------------------------------------------------------------------------
+
+try:  # plain try/import — importorskip here would skip the walk tests too
+    import hypothesis
+    from hypothesis import stateful
+    from hypothesis import strategies as st
+except ImportError:
+    hypothesis = None
+
+if hypothesis is not None:
+    class AllocatorMachine(stateful.RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.m = AllocModel(BlockAllocator(N_PAGES))
+
+        def _pick_owner(self, data):
+            owners = self.m.owners_with_pages()
+            return data.draw(st.sampled_from(owners), label="owner")
+
+        @stateful.rule(n=st.integers(min_value=1, max_value=5))
+        def alloc(self, n):
+            self.m.op_alloc(n)
+
+        @stateful.precondition(lambda self: self.m.owners_with_pages())
+        @stateful.rule(data=st.data())
+        def fork(self, data):
+            o = self._pick_owner(data)
+            k = data.draw(st.integers(1, len(self.m.held[o])), label="k")
+            self.m.op_fork(o, k)
+
+        @stateful.precondition(lambda self: self.m.owners_with_pages())
+        @stateful.rule(data=st.data())
+        def cow(self, data):
+            o = self._pick_owner(data)
+            idx = data.draw(st.integers(0, len(self.m.held[o]) - 1),
+                            label="idx")
+            self.m.op_cow(o, idx)
+
+        @stateful.precondition(lambda self: self.m.owners_with_pages())
+        @stateful.rule(data=st.data())
+        def free_tail(self, data):
+            o = self._pick_owner(data)
+            k = data.draw(st.integers(1, len(self.m.held[o])), label="k")
+            self.m.op_free_tail(o, k)
+
+        @stateful.precondition(lambda self: self.m.owners_with_pages())
+        @stateful.rule(data=st.data())
+        def free_request(self, data):
+            self.m.op_free_request(self._pick_owner(data))
+
+        @stateful.invariant()
+        def conserved(self):
+            self.m.check()
+
+    # ISSUE acceptance: the conservation invariant must survive >=1000
+    # hypothesis examples; the conftest ci profile pins deadline=None
+    # and derandomize so this cannot flake tier-1 on slow runners
+    AllocatorMachine.TestCase.settings = hypothesis.settings(
+        hypothesis.settings.get_profile("ci"),
+        max_examples=1000,
+        stateful_step_count=25,
+    )
+    TestAllocatorProperties = AllocatorMachine.TestCase
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_allocator_state_machine():
+        pass
