@@ -297,6 +297,112 @@ def bench_kernels() -> None:
 
 
 # ---------------------------------------------------------------------------
+# Decode attention: fused paged-attention kernel vs gather-then-attend
+# ---------------------------------------------------------------------------
+
+def bench_decode_attn(smoke: bool = False) -> None:
+    """Fused paged-attention decode kernel vs the gather-then-attend
+    oracle (the serving decode hot path; kernels/paged_attn.py).
+
+    Two measurements per block-table width (= ``max_len / page``):
+    median wall time of one jitted ``decode_step_paged`` tick for each
+    backend (CPU: the oracle runs as XLA gather + dense softmax, the
+    fused kernel in Pallas *interpret* mode — so the wall-clock
+    comparison here is NOT the TPU story; interpret mode pays a large
+    per-grid-step python cost), and the modeled HBM bytes/token each
+    path reads (the hardware-independent signal): the oracle reads the
+    full ``B * W * page`` KV positions per tick regardless of how much
+    context is live, the fused kernel only ``ceil(ctx/page)`` owned
+    pages per request — flat in ``max_len``, linear in live context.
+    The derived v5e section scales the same formulas to a big assigned
+    arch (yi-9b) with ``analysis/roofline.py`` HBM bandwidth, which is
+    where the bytes gap becomes decode-step time.
+    """
+    from repro.analysis.roofline import HBM_BW
+    from repro.configs.registry import get_config
+
+    cfg = get_config("tinylm")
+    params = decoder.init_params(cfg, jax.random.PRNGKey(0))
+    B, page, ctx = 4, 16, 40
+    widths = (4, 8) if smoke else (4, 8, 16)
+    iters = 2 if smoke else 3
+
+    def kv_bytes_per_tok(c, KV, hd, itemsize, n_layers):
+        return 2 * KV * hd * itemsize * c * n_layers
+
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    isz = np.dtype(cfg.dtype).itemsize
+    need = -(-(ctx + 1) // page)
+    tiny = {}
+    for W in widths:
+        pools = decoder.init_paged_pools(cfg, B * W + 2, page)
+        bts = np.full((B, W), -1, np.int32)
+        for b in range(B):
+            bts[b, :need] = np.arange(b * need, (b + 1) * need)
+        toks = jnp.asarray(np.full((B, 1), 7, np.int32))
+        pos = jnp.asarray(np.full((B,), ctx, np.int32))
+        mask = jnp.ones((B, 1), bool)
+        row = {}
+        for backend in ("gather", "fused"):
+            step = jax.jit(lambda pr, po, bt, tk, ps, mk, _b=backend:
+                           decoder.decode_step_paged(
+                               pr, cfg, po, bt, tk, ps, write_mask=mk,
+                               backend=_b))
+            us = timeit(lambda: step(params, pools, jnp.asarray(bts),
+                                     toks, pos, mask),
+                        warmup=1, iters=iters)
+            pages_read = B * W if backend == "gather" else B * need
+            bpt = kv_bytes_per_tok(pages_read * page // B, KV, hd, isz,
+                                   cfg.num_layers)
+            row[backend] = {"us_per_call": us, "model_bytes_per_token": bpt}
+            emit(f"decode_attn_{backend}_W{W}", us,
+                 f"B={B} ctx={ctx} max_len={W * page} "
+                 f"bytes_per_token={bpt:.0f} (interpret-mode wall time)")
+        tiny[f"W{W}"] = row
+
+    # modeled bytes/token sweep: fused is flat in max_len, the oracle
+    # scales with it; fused scales with the *live* context instead
+    sweep = {}
+    for max_len in (256, 1024, 4096):
+        c_pages = -(-(ctx + 1) // page) * page
+        sweep[str(max_len)] = {
+            "oracle": kv_bytes_per_tok(max_len, KV, hd, isz,
+                                       cfg.num_layers),
+            "fused": kv_bytes_per_tok(c_pages, KV, hd, isz,
+                                      cfg.num_layers),
+        }
+    fused_vals = {v["fused"] for v in sweep.values()}
+    flat = len(fused_vals) == 1
+    emit("decode_attn_bytes_flat_in_max_len", 0.0,
+         f"fused={sorted(fused_vals)} oracle="
+         f"{[v['oracle'] for v in sweep.values()]} flat={flat}")
+
+    # derived v5e decode-step attention-read time for a big arch
+    acfg = get_config("yi-9b")
+    aKV, ahd, alayers = acfg.num_kv_heads, acfg.head_dim, acfg.num_layers
+    v5e = {}
+    for live_ctx, max_len in ((2048, 32768), (8192, 32768)):
+        ob = kv_bytes_per_tok(max_len, aKV, ahd, 2, alayers)  # bf16 KV
+        fb = kv_bytes_per_tok(live_ctx, aKV, ahd, 2, alayers)
+        v5e[f"ctx{live_ctx}_max{max_len}"] = {
+            "oracle_bytes_per_token": ob,
+            "fused_bytes_per_token": fb,
+            "oracle_attn_read_us": ob / HBM_BW * 1e6,
+            "fused_attn_read_us": fb / HBM_BW * 1e6,
+        }
+        emit(f"decode_attn_v5e_yi9b_ctx{live_ctx}", fb / HBM_BW * 1e6,
+             f"oracle_us={ob / HBM_BW * 1e6:.1f} "
+             f"speedup={ob / fb:.1f}x (per decode step, attn KV reads, "
+             f"max_len={max_len})")
+    record("smoke", bool(smoke))
+    record("tiny", tiny)
+    record("bytes_per_token_by_max_len", sweep)
+    record("fused_flat_in_max_len", bool(flat))
+    record("v5e_derived", v5e)
+    assert flat, "fused bytes/token must not depend on max_len"
+
+
+# ---------------------------------------------------------------------------
 # Serving: paged-KV stack under a Poisson arrival trace (GRIFFIN on/off)
 # ---------------------------------------------------------------------------
 
@@ -586,6 +692,7 @@ BENCHES = {
     "table5": bench_table5_selection,
     "table3": bench_table3_latency,
     "kernels": bench_kernels,
+    "decode_attn": bench_decode_attn,
     "serving": bench_serving,
     "speculative": bench_speculative,
     "prefix": bench_prefix,

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _kernel(z_ref, s_ref):
     i = pl.program_id(0)
@@ -34,7 +36,7 @@ def expert_stat(
     z: jax.Array,  # [S, F]
     *,
     tile: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     S, F = z.shape
     tile = min(tile, S)
@@ -48,5 +50,5 @@ def expert_stat(
         in_specs=[pl.BlockSpec((tile, F), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((F,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((F,), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(z)

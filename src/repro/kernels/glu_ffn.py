@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.ref import _act
 
 
@@ -42,7 +43,7 @@ def glu_ffn(
     ts: int = 256,
     bf: int = 512,
     activation: str = "swiglu",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     S, D = x.shape
     F = wg.shape[1]
@@ -64,6 +65,6 @@ def glu_ffn(
         ],
         out_specs=pl.BlockSpec((ts, D), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], D), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, wg, w1, w2)
     return out[:S]

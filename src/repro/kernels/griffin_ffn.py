@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.ref import _act
 
 
@@ -61,7 +62,7 @@ def griffin_ffn(
     *,
     block_size: int = 128,
     activation: str = "swiglu",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     B, D = x.shape
     F = wg.shape[0]
@@ -83,5 +84,5 @@ def griffin_ffn(
         functools.partial(_kernel, activation=activation),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(block_ids, x, wg, w1, w2)

@@ -1,9 +1,10 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
-kernels TARGET v5e and are validated against ``ref.py`` in interpret
-mode per the assignment).  On a real TPU backend the same calls compile
-to Mosaic.
+Backend selection is centralized in ``kernels/backend.py``: every
+kernel takes ``interpret=None`` and resolves it through
+``default_interpret()`` — compile to Mosaic on TPU, interpret
+everywhere else (this container is CPU-only; the kernels TARGET v5e
+and are validated against ``ref.py`` per the assignment).
 """
 from __future__ import annotations
 
@@ -11,14 +12,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.backend import default_interpret  # re-export  # noqa: F401
 from repro.kernels.expert_stat import expert_stat as _expert_stat
 from repro.kernels.glu_ffn import glu_ffn as _glu_ffn
 from repro.kernels.griffin_ffn import griffin_ffn as _griffin_ffn
+from repro.kernels.paged_attn import paged_attn as _paged_attn
 from repro.kernels.paged_gather import paged_gather as _paged_gather
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def griffin_ffn_decode(x, wg, w1, w2, block_ids, *, block_size: int = 128,
@@ -26,27 +25,25 @@ def griffin_ffn_decode(x, wg, w1, w2, block_ids, *, block_size: int = 128,
     """Zero-copy pruned decode FFN (see kernels/griffin_ffn.py)."""
     return _griffin_ffn(
         x, wg, w1, w2, block_ids, block_size=block_size,
-        activation=activation, interpret=not _on_tpu(),
+        activation=activation,
     )
 
 
 def griffin_stat(z):
     """Fused eq. 6 statistic. z: [S, F] or [B, S, F]."""
     if z.ndim == 3:
-        return jax.vmap(lambda zz: _expert_stat(zz, interpret=not _on_tpu()))(z)
-    return _expert_stat(z, interpret=not _on_tpu())
+        return jax.vmap(lambda zz: _expert_stat(zz))(z)
+    return _expert_stat(z)
 
 
 def glu_ffn_forward(x, wg, w1, w2, *, activation: str = "swiglu"):
     """Dense GLU FFN forward. x: [S, D]."""
-    return _glu_ffn(x, wg, w1, w2, activation=activation,
-                    interpret=not _on_tpu())
+    return _glu_ffn(x, wg, w1, w2, activation=activation)
 
 
 def paged_gather(pool, block_tables):
     """Block-table page gather. pool [P, page, E]; bt [B, n] -> [B, n, page, E]."""
-    return _paged_gather(pool, jnp.clip(block_tables, 0),
-                         interpret=not _on_tpu())
+    return _paged_gather(pool, jnp.clip(block_tables, 0))
 
 
 def paged_kv_gather(pool, block_tables):
@@ -60,8 +57,21 @@ def paged_kv_gather(pool, block_tables):
     return out.reshape(B, n * page, KV, hd)
 
 
+def paged_attention(q, k_new, v_new, pool_k, pool_v, block_tables, pos,
+                    write_mask, *, window: int = 0):
+    """Fused paged-attention decode step (see kernels/paged_attn.py):
+    in-kernel K/V scatter + online-softmax attention streaming only the
+    pages each request owns.  Returns (ctx [B,S,H,hd] fp32, new_pool_k,
+    new_pool_v); pools are updated in place (input/output aliased)."""
+    return _paged_attn(
+        q, k_new, v_new, pool_k, pool_v, block_tables, pos, write_mask,
+        window=window,
+    )
+
+
 # re-export oracles for tests
 griffin_ffn_ref = ref.griffin_ffn_ref
 expert_stat_ref = ref.expert_stat_ref
 glu_ffn_ref = ref.glu_ffn_ref
 paged_gather_ref = ref.paged_gather_ref
+paged_attn_ref = ref.paged_attn_ref

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _kernel(bt_ref, pool_ref, out_ref):
     out_ref[...] = pool_ref[...].reshape(out_ref.shape)
@@ -33,7 +35,7 @@ def paged_gather(
     pool: jax.Array,  # [P, page, E]
     block_tables: jax.Array,  # [B, n] int32 page ids (pre-clipped to >= 0)
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Returns [B, n, page, E]: row (b, i) = pool[block_tables[b, i]]."""
     P, page, E = pool.shape
@@ -51,5 +53,5 @@ def paged_gather(
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, n, page, E), pool.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(block_tables, pool)

@@ -57,3 +57,67 @@ def paged_gather_ref(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
     """Block-table page gather. pool [P, page, E]; block_tables [B, n]
     int32 (entries pre-clipped to >= 0) -> [B, n, page, E]."""
     return jnp.take(pool, jnp.clip(block_tables, 0), axis=0)
+
+
+def paged_attn_ref(
+    q: jax.Array,            # [B, S, H, hd]
+    k_new: jax.Array,        # [B, S, KV, hd]
+    v_new: jax.Array,        # [B, S, KV, hd]
+    pool_k: jax.Array,       # [P+1, page, KV, hd]
+    pool_v: jax.Array,       # [P+1, page, KV, hd]
+    block_tables: jax.Array, # [B, W] int32, -1 = unallocated
+    pos: jax.Array,          # [B] int32
+    write_mask: jax.Array,   # [B, S] bool
+    window: int = 0,
+):
+    """Gather-then-attend oracle for the fused ``paged_attn`` kernel:
+    scatter new K/V (masked slots -> trash page), materialize the full
+    per-request page view, masked softmax over every position.  The
+    same math as ``attention.paged_attn_step``'s fallback path.
+    Returns (ctx [B,S,H,hd] fp32, new_pool_k, new_pool_v)."""
+    NEG_INF = -2.0e38
+    B, S, H, hd = q.shape
+    KV = k_new.shape[2]
+    G = H // KV
+    page = pool_k.shape[1]
+    trash = pool_k.shape[0] - 1
+    W = block_tables.shape[1]
+    positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    logical_page = positions // page
+    offset = positions % page
+    gp = jnp.take_along_axis(
+        block_tables, jnp.clip(logical_page, 0, W - 1), axis=1
+    )
+    ok = write_mask & (gp >= 0) & (logical_page < W)
+    gp = jnp.where(ok, gp, trash)
+    new_k = pool_k.at[gp.reshape(-1), offset.reshape(-1)].set(
+        k_new.reshape(B * S, KV, hd)
+    )
+    new_v = pool_v.at[gp.reshape(-1), offset.reshape(-1)].set(
+        v_new.reshape(B * S, KV, hd)
+    )
+    k_cache = paged_gather_ref(
+        new_k.reshape(pool_k.shape[0], page, KV * hd),
+        block_tables,
+    ).reshape(B, W * page, KV, hd)
+    v_cache = paged_gather_ref(
+        new_v.reshape(pool_v.shape[0], page, KV * hd),
+        block_tables,
+    ).reshape(B, W * page, KV, hd)
+    C = W * page
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache)
+    scores = scores.astype(jnp.float32) * scale
+    kpos = jnp.arange(C, dtype=jnp.int32)[None, None, :]
+    qpos = positions[:, :, None]
+    valid = kpos <= qpos
+    if window:
+        valid &= kpos > qpos - window
+    page_alloc = (block_tables >= 0)[:, :, None]
+    valid &= page_alloc.repeat(page, axis=2).reshape(B, 1, C)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v_cache.dtype),
+                     v_cache)
+    return (ctx.reshape(B, S, H, hd).astype(jnp.float32), new_k, new_v)

@@ -47,6 +47,13 @@ def main() -> None:
                     help="disable shared-prefix paged-KV reuse (radix "
                          "cache + copy-on-write pages; output is "
                          "token-identical either way)")
+    ap.add_argument("--kernel-backend", default="auto",
+                    choices=["auto", "fused", "gather"],
+                    help="paged-attention path: the fused Pallas decode "
+                         "kernel (kernels/paged_attn.py), the gather-"
+                         "then-attend oracle, or auto (fused on TPU, "
+                         "gather elsewhere); output is token-identical "
+                         "either way")
     ap.add_argument("--ckpt-dir", default="artifacts/models/tinylm-s500")
     args = ap.parse_args()
 
@@ -90,6 +97,7 @@ def main() -> None:
             num_pages=args.num_pages, n_slots=args.slots,
             prefill_chunk=args.prefill_chunk, max_len=args.max_len,
             spec_k=args.spec_k, prefix_cache=not args.no_prefix_cache,
+            kernel_backend=args.kernel_backend,
         )
         for rid, (prompt, gen) in enumerate(reqs):
             srv.submit(prompt, max_new=gen, rid=rid)

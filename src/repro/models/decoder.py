@@ -713,11 +713,12 @@ def _apply_layer_paged(
     cfg,
     pruned_ffn: Optional[Dict],
     collect_stats: bool,
+    backend: str = "gather",
 ):
     h = apply_norm(lp["mixer_norm"], x, cfg)
     y, new_pool = attn_lib.paged_attn_step(
         lp["mixer"], pool, block_tables, h, pos, write_mask, cfg,
-        kind=desc.attn_kind,
+        kind=desc.attn_kind, backend=backend,
     )
     x = x + y
 
@@ -765,13 +766,18 @@ def decode_step_paged(
     write_mask: Optional[jax.Array] = None,  # [B, S] bool
     pruned: Optional[Dict] = None,  # per-slot compacted FF tree
     collect_stats: bool = False,
+    backend: str = "gather",
 ) -> Tuple[jax.Array, Dict, Optional[Dict]]:
     """Batched paged step with per-request positions.
 
     Unifies chunked prefill (B=1, S=chunk, ``collect_stats`` streams the
     GRIFFIN ``s_sq`` statistic per chunk) and batched decode (S=1, one
     request per slot, ``pruned`` holds per-slot compacted FF weights).
-    Returns (logits [B,S,V], new pools, stats tree or None).
+    ``backend`` picks the attention path per
+    ``attention.resolve_attn_backend``: the fused paged-attention
+    kernel or the gather-then-attend oracle (default, bit-exact vs the
+    contiguous path at fp32).  Returns (logits [B,S,V], new pools,
+    stats tree or None).
     """
     B, S = token.shape
     if write_mask is None:
@@ -792,6 +798,7 @@ def decode_step_paged(
                 x, npool, st = _apply_layer_paged(
                     sp[f"layer{j}"], desc, seg_pool[f"layer{j}"], x,
                     block_tables, pos, write_mask, cfg, pf, collect_stats,
+                    backend,
                 )
                 np_seg[f"layer{j}"] = npool
                 if collect_stats:
@@ -808,6 +815,7 @@ def decode_step_paged(
                     x_c, npool, st = _apply_layer_paged(
                         lp_all[f"pos{j}"], desc, pool_all[f"pos{j}"], x_c,
                         block_tables, pos, write_mask, cfg, pf, collect_stats,
+                        backend,
                     )
                     np_out[f"pos{j}"] = npool
                     st_out[f"pos{j}"] = st if collect_stats else jnp.zeros(())
@@ -832,6 +840,7 @@ def verify_step_paged(
     tokens: jax.Array,  # [B, k+1] int32: last committed token + k drafts
     pos: jax.Array,  # [B] int32 committed KV length per request
     write_mask: jax.Array,  # [B, k+1] bool
+    backend: str = "gather",
 ) -> Tuple[jax.Array, Dict]:
     """Multi-token dense verify step for self-speculative decoding.
 
@@ -854,6 +863,7 @@ def verify_step_paged(
     logits, pools, _ = decode_step_paged(
         params, cfg, pools, block_tables, tokens, pos,
         write_mask=write_mask, pruned=None, collect_stats=False,
+        backend=backend,
     )
     return logits, pools
 

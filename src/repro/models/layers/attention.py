@@ -290,6 +290,17 @@ def _gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
     return g.reshape(B, n * pool.shape[1], *pool.shape[2:])
 
 
+def resolve_attn_backend(backend: str) -> str:
+    """``auto`` -> the fused Pallas kernel on TPU, the gather-then-attend
+    oracle elsewhere (bit-exact vs the contiguous path at fp32, which
+    the exactness tests pin).  Explicit ``fused``/``gather`` pass
+    through — ``fused`` works off-TPU too (interpret mode)."""
+    if backend == "auto":
+        return "fused" if jax.default_backend() == "tpu" else "gather"
+    assert backend in ("fused", "gather"), backend
+    return backend
+
+
 def paged_attn_step(
     params: Dict,
     pool: Dict,
@@ -299,20 +310,50 @@ def paged_attn_step(
     write_mask: jax.Array,  # [B, S] bool: which new tokens really exist
     cfg,
     kind: str = "global",
+    backend: str = "gather",
 ) -> Tuple[jax.Array, Dict]:
-    """One paged step: project, scatter new KV into pages, gather + attend.
+    """One paged step: project, scatter new KV into pages, attend.
 
     Token ``x[b, s]`` sits at absolute position ``pos[b] + s``; its K/V
     land in page ``block_tables[b, (pos[b]+s) // page]`` at offset
-    ``(pos[b]+s) % page``.  Tokens with ``write_mask`` False (padding of
-    a partial chunk, inactive decode slots) are redirected to the trash
-    page.  Returns (y [B,S,D], updated pool).
+    ``(pos[b]+s) % page``.  Returns (y [B,S,D], updated pool).
+
+    Two backends (``resolve_attn_backend``):
+
+    * ``fused`` — the Pallas kernel in ``kernels/paged_attn.py``:
+      in-kernel scatter + online-softmax streaming of only the pages a
+      request owns; the pools are updated in place (aliased).  HBM
+      traffic scales with live context, not block-table width.
+    * ``gather`` — the differential oracle: scatter (tokens with
+      ``write_mask`` False — padding of a partial chunk, inactive
+      decode slots — are redirected to the trash page), then gather the
+      full per-request page view and run the same masked softmax as the
+      contiguous path.  Attends every ``block_tables.shape[1]`` pages,
+      so callers (the server) should narrow the table width to the
+      tick's live context rather than always passing
+      ``max_pages_per_request``.
+
+    The two agree to fp32 rounding on every row a reader observes; rows
+    of inactive slots (no pages allocated) are garbage on both paths
+    (uniform-softmax garbage vs zeros) and are never read.
     """
     B, S, D = x.shape
     page = pool["k"].shape[1]
     trash = pool["k"].shape[0] - 1
     positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # [B,S]
     q, k_new, v_new = _project_qkv(params, x, positions, cfg, use_rope=True)
+
+    if backend == "fused":
+        from repro.kernels import ops
+
+        window = cfg.sliding_window \
+            if (kind == "local" and cfg.sliding_window) else 0
+        ctx, pk, pv = ops.paged_attention(
+            q, k_new, v_new, pool["k"], pool["v"], block_tables, pos,
+            write_mask, window=window,
+        )
+        y = _out_proj(params, ctx.astype(x.dtype), cfg)
+        return y, {"k": pk, "v": pv}
 
     logical_page = positions // page
     offset = positions % page

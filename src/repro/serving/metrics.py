@@ -18,7 +18,14 @@ lookups that matched a cached prefix; ``saved_prefill_tokens`` counts
 prompt tokens whose prefill (and GRIFFIN stat accumulation) was skipped
 because cached pages carried them; ``cow_copies`` counts copy-on-write
 page forks (each is one device page copy); ``shared_pages_mean`` tracks
-how many pool pages are multiply-referenced per step.  Per-request,
+how many pool pages are multiply-referenced per step.
+
+Attention-traffic gauge (``attn_bytes_read``): modeled HBM bytes of
+paged KV the attention path read each tick, fed by the server from the
+active kernel backend (the fused ``paged_attn`` kernel streams only
+owned pages — O(live context); the gather oracle reads every slot's
+full narrowed block-table width).  ``attn_bytes_per_token`` in
+``summary()`` is the number the ``decode_attn`` benchmark tracks.  Per-request,
 ``prefix_hit_tokens`` records the matched prefix length — the warm/cold
 TTFT split in ``benchmarks/run.py --only prefix`` comes from it.
 """
@@ -102,6 +109,11 @@ class ServingMetrics:
     prefix_evictions: int = 0
     cow_copies: int = 0
     shared_pages: List[int] = field(default_factory=list)  # per-step gauge
+    # modeled HBM bytes of paged KV read by attention per tick (per-step
+    # gauge; the server models it from the kernel backend: the fused
+    # kernel streams only owned pages, the gather oracle materializes
+    # the full narrowed block-table width for every slot)
+    attn_bytes_read: List[float] = field(default_factory=list)
 
     # -- request lifecycle -------------------------------------------------
     def on_submit(self, rid: int, prompt_tokens: int, priority: int = 0) -> None:
@@ -178,13 +190,15 @@ class ServingMetrics:
 
     # -- per-step gauges ---------------------------------------------------
     def on_step(self, pool_in_use_frac: float, decode_batch: int,
-                shared_pages: int = 0) -> None:
+                shared_pages: int = 0,
+                attn_bytes_read: float = 0.0) -> None:
         self.steps += 1
         if decode_batch:
             self.decode_steps += 1
         self.pool_occupancy.append(pool_in_use_frac)
         self.decode_batch_sizes.append(decode_batch)
         self.shared_pages.append(shared_pages)
+        self.attn_bytes_read.append(attn_bytes_read)
 
     # -- aggregation -------------------------------------------------------
     def summary(self) -> Dict[str, float]:
@@ -227,4 +241,11 @@ class ServingMetrics:
             "cow_copies": float(self.cow_copies),
             "shared_pages_mean": float(np.mean(self.shared_pages))
             if self.shared_pages else 0.0,
+            "attn_bytes_read_total": float(np.sum(self.attn_bytes_read))
+            if self.attn_bytes_read else 0.0,
+            "attn_bytes_read_mean": float(np.mean(self.attn_bytes_read))
+            if self.attn_bytes_read else 0.0,
+            "attn_bytes_per_token": (
+                float(np.sum(self.attn_bytes_read)) / total_tokens
+            ) if (self.attn_bytes_read and total_tokens) else 0.0,
         }

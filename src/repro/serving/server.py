@@ -23,8 +23,22 @@ donor prefill wrote, so warm decode is token-identical to cold decode
 Both phases share the per-layer KV page pools; all host state (block
 tables, positions, tokens) lives in the scheduler's request objects.
 Shapes are static ([1, prefill_chunk], [n_slots, 1], and — with
-``spec_k`` — [n_slots, spec_k + 1]) so at most three decode-path
-programs are ever compiled.
+``spec_k`` — [n_slots, spec_k + 1]); block tables are **narrowed to
+the tick's live context** (the widest request's page count, rounded up
+to a power of two and capped at ``max_pages_per_request``) before each
+jitted call, so the gather-then-attend oracle stops materializing — and
+attending over — fully-unallocated tail pages, and the fused kernel's
+grid shrinks with it.  The power-of-two rounding bounds the program
+count at ``log2(max_pages) + 1`` widths per step type.
+
+Attention backends (``kernel_backend``): ``fused`` runs the Pallas
+paged-attention kernel (``kernels/paged_attn.py`` — in-kernel KV
+scatter, online softmax over only the pages each request owns),
+``gather`` the gather-then-attend oracle, ``auto`` (default) fused on
+TPU / gather elsewhere.  Outputs are token-identical either way
+(``tests/test_paged_attn_kernel.py``).  The KV pools are **donated**
+through every jitted step, so XLA updates pages in place instead of
+copying the pool buffers every tick.
 
 Self-speculative decoding (``spec_k > 0``, requires ``gcfg``): the
 GRIFFIN-compacted per-request FF weights already installed in each
@@ -73,6 +87,7 @@ import numpy as np
 
 from repro.core import griffin as griffin_lib
 from repro.models import decoder
+from repro.models.layers.attention import resolve_attn_backend
 from repro.serving import sampling
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged import PagedConfig
@@ -98,6 +113,7 @@ class PagedServer:
         max_len: int = 256,
         spec_k: int = 0,
         prefix_cache: bool = True,
+        kernel_backend: str = "auto",
         metrics: Optional[ServingMetrics] = None,
     ):
         assert decoder.supports_paged(cfg), (
@@ -117,36 +133,45 @@ class PagedServer:
                 "draft model"
             )
         self.spec_k = spec_k
+        self.backend = resolve_attn_backend(kernel_backend)
         self.sched = Scheduler(self.pcfg, n_slots, prefill_chunk,
                                metrics=metrics, prefix_cache=prefix_cache)
         self.sched.needs_stats = self.gcfg is not None
         self.pools = decoder.init_paged_pools(cfg, num_pages, page_size)
         self.pruned_slots: Optional[Dict] = None  # per-slot compacted FF
         self._next_rid = 0
+        self._tick_attn_bytes = 0.0  # modeled KV read bytes, this tick
+        backend = self.backend
 
+        # pools are donated through every step (argnums=1): XLA updates
+        # the page buffers in place instead of copying every per-layer
+        # pool each tick — the server always reassigns ``self.pools``
+        # from the return value, so the stale donated reference is
+        # never reused
         def prefill(params, pools, bt, tokens, pos, mask, pruned, collect):
             return decoder.decode_step_paged(
                 params, cfg, pools, bt, tokens, pos, write_mask=mask,
-                pruned=pruned, collect_stats=collect,
+                pruned=pruned, collect_stats=collect, backend=backend,
             )
 
-        self._prefill = jax.jit(prefill, static_argnames=("collect",))
+        self._prefill = jax.jit(prefill, static_argnames=("collect",),
+                                donate_argnums=(1,))
 
         def dec(params, pools, bts, toks, pos, mask, pruned):
             logits, pools, _ = decoder.decode_step_paged(
                 params, cfg, pools, bts, toks, pos, write_mask=mask,
-                pruned=pruned,
+                pruned=pruned, backend=backend,
             )
             return logits, pools
 
-        self._decode = jax.jit(dec)
+        self._decode = jax.jit(dec, donate_argnums=(1,))
 
         def verify(params, pools, bts, toks, pos, mask):
             return decoder.verify_step_paged(
-                params, cfg, pools, bts, toks, pos, mask
+                params, cfg, pools, bts, toks, pos, mask, backend=backend
             )
 
-        self._verify = jax.jit(verify)
+        self._verify = jax.jit(verify, donate_argnums=(1,))
 
         def cow_copy(pools, src, dst):
             return decoder.copy_pool_pages(cfg, pools, src, dst)
@@ -189,7 +214,9 @@ class PagedServer:
                 self._run_decode(plan.decode)
         self.sched.metrics.on_step(self.sched.pool_in_use_frac(),
                                    len(plan.decode),
-                                   shared_pages=self.sched.alloc.num_shared)
+                                   shared_pages=self.sched.alloc.num_shared,
+                                   attn_bytes_read=self._tick_attn_bytes)
+        self._tick_attn_bytes = 0.0
         return self.sched.has_work
 
     def drain(self) -> Dict[int, List[int]]:
@@ -199,6 +226,40 @@ class PagedServer:
         return {rid: r.generated for rid, r in self.sched.finished.items()
                 if not r.aborted}
 
+    # -- live-context narrowing + modeled attention traffic ----------------
+    def _live_width(self, reqs: List[ScheduledRequest]) -> int:
+        """Block-table width for this call: the widest request's page
+        count, rounded up to a power of two (bounds distinct compiled
+        programs at log2(max_pages)+1 per step type), capped at
+        ``max_pages_per_request``.  Everything past it is unallocated in
+        every row, so narrowing changes no observable value — it only
+        stops the oracle from gathering and attending dead tail pages.
+        """
+        W = self.pcfg.max_pages_per_request
+        n = max((len(r.table.pages) for r in reqs), default=1)
+        w = 1
+        while w < max(n, 1):
+            w *= 2
+        return min(w, W)
+
+    def _count_attn_bytes(self, pos: List[int], S: int, width: int,
+                          rows: int) -> None:
+        """Accumulate this call's modeled HBM bytes of KV read by
+        attention (the ``attn_bytes_read`` per-tick gauge).  The fused
+        kernel streams ``ceil((pos+S)/page)`` owned pages per live
+        request; the gather oracle materializes ``width`` pages for
+        every row, live or not."""
+        page = self.pcfg.page_size
+        per_page = (2 * page * self.cfg.num_kv_heads * self.cfg.head_dim
+                    * np.dtype(self.cfg.dtype).itemsize)
+        if self.backend == "fused":
+            pages = sum(-(-(p + S) // page) for p in pos)
+        else:
+            pages = rows * width
+        self._tick_attn_bytes += float(
+            self.cfg.num_layers * pages * per_page
+        )
+
     # -- phases ------------------------------------------------------------
     def _run_prefill(self, work: PrefillWork) -> None:
         req, chunk = work.req, self.sched.prefill_chunk
@@ -207,8 +268,10 @@ class PagedServer:
         toks[0, :Lc] = work.tokens
         mask = np.zeros((1, chunk), bool)
         mask[0, :Lc] = True
-        bt = req.table.as_array(self.pcfg.max_pages_per_request)[None]
+        Wl = self._live_width([req])
+        bt = req.table.as_array(Wl)[None]
         pos = np.array([work.start], np.int32)
+        self._count_attn_bytes([work.start], Lc, Wl, rows=1)
         collect = work.collect_stats and self.gcfg is not None
         # resume of a compacted request: generated-token positions must
         # rebuild their KV with the same FF weights that decoded them, or
@@ -241,7 +304,7 @@ class PagedServer:
             self._install_pruned(req.slot, req.pruned_host)
 
     def _run_decode(self, reqs: List[ScheduledRequest]) -> None:
-        B, W = self.n_slots, self.pcfg.max_pages_per_request
+        B, W = self.n_slots, self._live_width(reqs)
         toks = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
         mask = np.zeros((B, 1), bool)
@@ -252,6 +315,7 @@ class PagedServer:
             pos[s] = req.cache_len
             mask[s, 0] = True
             bts[s] = req.table.as_array(W)
+        self._count_attn_bytes([r.cache_len for r in reqs], 1, W, rows=B)
         # spec mode: the compacted weights are only the *draft* — a
         # vanilla tick (pool-pressure fallback) must decode dense, or its
         # tokens and KV diverge from the dense stream the verifier commits
@@ -299,7 +363,7 @@ class PagedServer:
         """One draft/verify/commit/rollback round for the decode batch
         (per-request draft lengths + pages planned by ``_plan_spec``)."""
         K = self.spec_k
-        B, W = self.n_slots, self.pcfg.max_pages_per_request
+        B, W = self.n_slots, self._live_width(reqs)
         bts = np.full((B, W), -1, np.int32)
         base = {}
         last = {}
@@ -322,6 +386,10 @@ class PagedServer:
                 toks[s, 0] = last[req.rid]
                 pos[s] = base[req.rid] + i
                 mask[s, 0] = i < ks[req.rid]
+            self._count_attn_bytes(
+                [base[r.rid] + i for r in reqs if i < ks[r.rid]], 1, W,
+                rows=B,
+            )
             logits, self.pools = self._decode(
                 self.params, self.pools, bts_j, jnp.asarray(toks),
                 jnp.asarray(pos), jnp.asarray(mask), self.pruned_slots,
@@ -344,6 +412,9 @@ class PagedServer:
             vtoks[s, 1 : kr + 1] = draft[req.rid]
             vpos[s] = base[req.rid]
             vmask[s, : kr + 1] = True
+        self._count_attn_bytes(
+            [base[r.rid] + ks[r.rid] for r in reqs], 1, W, rows=B
+        )
         vlogits, self.pools = self._verify(
             self.params, self.pools, bts_j, jnp.asarray(vtoks),
             jnp.asarray(vpos), jnp.asarray(vmask),
