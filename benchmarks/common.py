@@ -34,16 +34,17 @@ from repro.training.schedule import warmup_cosine
 CKPT_ROOT = Path("artifacts/models")
 
 
-def trained_tiny(steps: int = 500) -> Tuple[object, Dict]:
-    """Load the tinylm trained for exactly ``steps`` steps (train and
-    cache on first use).
+def trained_tiny(steps: int = 500, arch: str = "tinylm") -> Tuple[object, Dict]:
+    """Load the tiny LM ``arch`` trained for exactly ``steps`` steps
+    (train and cache on first use).
 
-    The cache directory is keyed by ``steps`` — otherwise whichever
-    caller warms the cache first (a 120-step test vs the 500-step
-    benchmark default) silently decides every later caller's model,
-    and persisted BENCH numbers stop being reproducible."""
-    cfg = get_config("tinylm")
-    mgr = CheckpointManager(str(CKPT_ROOT / f"tinylm-s{steps}"),
+    The cache directory is keyed by ``(arch, steps)`` — otherwise
+    whichever caller warms the cache first (a 120-step test vs the
+    500-step benchmark default, or a tinylm-tp run vs tinylm) silently
+    decides every later caller's model, and persisted BENCH numbers
+    stop being reproducible."""
+    cfg = get_config(arch)
+    mgr = CheckpointManager(str(CKPT_ROOT / f"{arch}-s{steps}"),
                             interval=100, keep=2)
     # only the final checkpoint counts: an interrupted training run
     # leaves intermediate saves that must trigger a resumed train, not

@@ -657,6 +657,70 @@ def bench_prefix(smoke: bool = False) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Sharded serving: shard_map tensor parallelism over an emulated mesh
+# ---------------------------------------------------------------------------
+
+def bench_sharded(smoke: bool = False) -> None:
+    """Tensor-parallel paged serving vs the single-device oracle
+    (distributed/tp.py), on the trained tiny TP model.
+
+    Runs in a subprocess with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the flag
+    must precede jax init; see ``benchmarks/sharded_child.py`` for the
+    measured trace).  Asserted claims: greedy output token-identical to
+    single-device for every (spec_k, model-axis) case, and per-shard
+    KV-pool bytes exactly 1/N of the single-device pool (KV-head-axis
+    sharding).  CPU-emulated wall clocks are overhead measurements, not
+    the TPU speedup story — the memory ∝ 1/N number is the
+    hardware-independent signal.
+    """
+    import os
+    import subprocess
+
+    # warm the checkpoint cache here, with the full CPU thread pool:
+    # inside the child the 8 emulated devices each get 1/8 of the
+    # threads, which makes first-use training needlessly slow
+    trained_tiny(120 if smoke else 500, arch="tinylm-tp")
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # the child sets its own device count
+    cmd = [sys.executable, str(Path(__file__).parent / "sharded_child.py")]
+    if smoke:
+        cmd.append("--smoke")
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=3000)
+    tail = "\n".join((r.stdout + r.stderr).splitlines()[-30:])
+    assert r.returncode == 0, f"sharded_child failed:\n{tail}"
+    # literal, not imported: importing sharded_child would run its
+    # module body, which force-sets the 8-device XLA_FLAGS process-wide
+    marker = "BENCH_SHARDED_JSON:"
+    line = next(l for l in r.stdout.splitlines() if l.startswith(marker))
+    payload = json.loads(line[len(marker):])
+
+    all_identical = True
+    for c in payload["cases"]:
+        n, sk = c["model_axis"], c["spec_k"]
+        all_identical &= c["token_identical"]
+        shrink = c["pool_bytes_single"] / c["pool_bytes_per_shard"]
+        emit(f"sharded_model{n}_spec{sk}", c["wall_sharded_s"] * 1e6,
+             f"single_wall={c['wall_single_s']:.2f}s "
+             f"tok/s={c['tokens_per_sec_sharded']:.1f} "
+             f"pool_bytes/shard={c['pool_bytes_per_shard']} "
+             f"(1/{shrink:.0f} of single) "
+             f"token_identical={c['token_identical']} "
+             f"preempt={c['preemptions']:.0f} "
+             f"prefix_hit_rate={c['prefix_hit_rate']:.2f}")
+        assert c["pool_bytes_per_shard"] * n == c["pool_bytes_single"], c
+    record("smoke", payload["smoke"])
+    record("arch", payload["arch"])
+    record("train_steps", payload["train_steps"])
+    record("cases", payload["cases"])
+    record("token_identical", bool(all_identical))
+    record("pool_bytes_shrink_1_over_n", True)
+    assert all_identical, "sharded serving diverged from single-device"
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from dry-run artifacts
 # ---------------------------------------------------------------------------
 
@@ -696,6 +760,7 @@ BENCHES = {
     "serving": bench_serving,
     "speculative": bench_speculative,
     "prefix": bench_prefix,
+    "sharded": bench_sharded,
     "roofline": bench_roofline_table,
 }
 

@@ -31,6 +31,7 @@ _REGISTRY: Dict[str, Callable[[], ModelConfig]] = {
     "hubert-xlarge": hubert_xlarge.config,
     # local (non-assigned) configs for training examples / benchmarks
     "tinylm": tinylm.config,
+    "tinylm-tp": tinylm.config_tp,
     "lm100m": tinylm.config_100m,
 }
 

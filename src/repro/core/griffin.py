@@ -43,8 +43,22 @@ class GriffinConfig:
     seed: int = 0                  # for sampling modes
 
     def k_of(self, d_ff: int) -> int:
+        """Expert count for an FF width of ``d_ff``.
+
+        With ``tp_shards > 1`` the count is rounded **up** to a multiple
+        of the shard count: under tensor parallelism the compacted FF
+        hidden axis must stay divisible by the ``model`` mesh axis, or
+        the sharding rules silently replicate the compacted weights
+        (``distributed.sharding.spec_for`` drops non-dividing axes —
+        an N× memory blow-up with no error).  Padding the selection by
+        at most ``tp_shards - 1`` extra experts costs a sliver of the
+        sparsity win and keeps every shard's pruned width identical.
+        """
         k = int(round(d_ff * (1.0 - self.sparsity)))
-        return max(1, min(d_ff, k))
+        k = max(1, min(d_ff, k))
+        if self.tp_shards > 1:
+            k = min(d_ff, -(-k // self.tp_shards) * self.tp_shards)
+        return k
 
     def replace(self, **kw) -> "GriffinConfig":
         return dataclasses.replace(self, **kw)

@@ -32,3 +32,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over host CPU devices (tests)."""
     return jax.make_mesh(shape, axes)
+
+
+def make_serving_mesh(n: int, axis: str = "model"):
+    """1-D tensor-parallel mesh for the paged serving path
+    (``PagedServer(mesh=...)``, ``launch/serve.py --mesh model=N``).
+
+    Uses the first ``n`` visible devices; on a CPU host, emulate with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* jax
+    initializes.
+    """
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {axis}={n} needs {n} devices, found {len(devices)} — "
+            "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count"
+            f"={n} before starting the process"
+        )
+    return jax.make_mesh((n,), (axis,), devices=devices[:n])

@@ -7,6 +7,16 @@ slot-broadcast ``ContinuousBatcher``.
   PYTHONPATH=src python -m repro.launch.serve --arch tinylm \
       --requests 8 --sparsity 0.5
 
+Tensor-parallel serving (``--mesh model=N``): the paged server runs
+shard_mapped over an N-way ``model`` mesh axis — KV pools and the
+attention kernel shard along KV heads, GRIFFIN-compacted FF experts
+along the (divisible-padded) hidden axis; outputs are token-identical
+to the single-device path.  On CPU, emulate devices first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch tinylm-tp \
+      --mesh model=2 --requests 8
+
 On this CPU container it serves the framework-trained tiny model (or an
 untrained smoke config for other archs); on a real pod the same engine
 runs under the production mesh policies (see repro/launch/cells.py for
@@ -22,15 +32,28 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs.registry import ASSIGNED_ARCHS, get_config
 from repro.core import GriffinConfig
 from repro.data.pipeline import SyntheticCorpus
+from repro.launch.mesh import make_serving_mesh
 from repro.models import decoder
 from repro.serving.engine import ContinuousBatcher
 from repro.serving.server import PagedServer
 
 
+def parse_mesh(spec: str):
+    """``model=N`` -> (axis, N).  Only a 1-D tensor-parallel axis is
+    meaningful for the paged server today."""
+    try:
+        axis, n = spec.split("=")
+        return axis.strip(), int(n)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--mesh wants AXIS=N (e.g. model=2), got {spec!r}"
+        )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinylm",
-                    choices=ASSIGNED_ARCHS + ["tinylm"])
+                    choices=ASSIGNED_ARCHS + ["tinylm", "tinylm-tp"])
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
@@ -54,19 +77,27 @@ def main() -> None:
                          "then-attend oracle, or auto (fused on TPU, "
                          "gather elsewhere); output is token-identical "
                          "either way")
-    ap.add_argument("--ckpt-dir", default="artifacts/models/tinylm-s500")
+    ap.add_argument("--mesh", type=parse_mesh, default=None,
+                    metavar="AXIS=N",
+                    help="run the paged server tensor-parallel over an "
+                         "N-way mesh axis (e.g. model=2): KV pools + "
+                         "fused attention shard along KV heads, GRIFFIN "
+                         "experts along the FF hidden axis; output is "
+                         "token-identical to single-device serving")
+    ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
 
-    if args.arch == "tinylm":
-        cfg = get_config("tinylm")
-        mgr = CheckpointManager(args.ckpt_dir, interval=1)
+    if args.arch in ("tinylm", "tinylm-tp"):
+        cfg = get_config(args.arch)
+        ckpt_dir = args.ckpt_dir or f"artifacts/models/{args.arch}-s500"
+        mgr = CheckpointManager(ckpt_dir, interval=1)
         if mgr.latest_step() is not None:
             state, step = mgr.restore_latest()
             params = jax.tree.map(jax.numpy.asarray, state["params"])
-            print(f"[ckpt] loaded {args.ckpt_dir} (step {step})")
+            print(f"[ckpt] loaded {ckpt_dir} (step {step})")
         else:
             params = decoder.init_params(cfg, jax.random.PRNGKey(0))
-            print(f"[ckpt] no checkpoint in {args.ckpt_dir}; serving an "
+            print(f"[ckpt] no checkpoint in {ckpt_dir}; serving an "
                   f"UNTRAINED init (train one via benchmarks.common."
                   f"trained_tiny or pass --ckpt-dir)")
     else:
@@ -91,13 +122,24 @@ def main() -> None:
                  f"{cfg.name} falls back to the slot batcher")
     if args.spec_k:
         mode += f"+spec{args.spec_k}"
+    mesh = None
+    if args.mesh is not None:
+        axis, n = args.mesh
+        if not decoder.supports_paged(cfg):
+            ap.error(f"--mesh requires the paged serving path; "
+                     f"{cfg.name} falls back to the slot batcher")
+        mesh = make_serving_mesh(n, axis)
+        mode += f"+tp{n}"
+        print(f"[mesh] {axis}={n} over {jax.device_count()} visible "
+              f"devices ({jax.default_backend()})")
     if decoder.supports_paged(cfg):
         srv = PagedServer(
             cfg, params, gcfg=gcfg, page_size=args.page_size,
             num_pages=args.num_pages, n_slots=args.slots,
             prefill_chunk=args.prefill_chunk, max_len=args.max_len,
             spec_k=args.spec_k, prefix_cache=not args.no_prefix_cache,
-            kernel_backend=args.kernel_backend,
+            kernel_backend=args.kernel_backend, mesh=mesh,
+            tp_axis=args.mesh[0] if args.mesh else "model",
         )
         for rid, (prompt, gen) in enumerate(reqs):
             srv.submit(prompt, max_new=gen, rid=rid)

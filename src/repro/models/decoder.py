@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed.sharding import constrain
+from repro.distributed.sharding import constrain, psum_if_tp
 from repro.models import param as param_lib
 from repro.models.common import (
     apply_norm,
@@ -742,7 +742,8 @@ def _apply_layer_paged(
                     "x_sq": jnp.sum(jnp.square(hm), axis=(0, 1)),
                     "z_sq": jnp.sum(jnp.square(zf), axis=(0, 1)),
                 }
-            y = jnp.einsum("...f,fd->...d", z, lp["ffn"]["w2"])
+            # sharded F axis (shard_map TP) -> partial sum per shard
+            y = psum_if_tp(jnp.einsum("...f,fd->...d", z, lp["ffn"]["w2"]))
             if "b2" in lp["ffn"]:
                 y = y + lp["ffn"]["b2"]
         x = x + y

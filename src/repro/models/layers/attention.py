@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed.sharding import constrain
+from repro.distributed.sharding import constrain, psum_if_tp
 from repro.models.common import apply_rope, rms_normalize
 from repro.models.param import ParamSpec
 
@@ -73,8 +73,15 @@ def _project_qkv(params, x, positions, cfg, use_rope: bool):
 
 
 def _out_proj(params, ctx, cfg):
-    """ctx: [B,S,H,hd] -> [B,S,D]."""
+    """ctx: [B,S,H,hd] -> [B,S,D].
+
+    Under shard_map tensor parallelism (``sharding.tp_axis`` active)
+    the head axis is sharded, so the contraction over ``h`` yields a
+    partial sum — all-reduced across shards before the (replicated)
+    bias so the bias is counted exactly once.
+    """
     y = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    y = psum_if_tp(y)
     if "bo" in params:
         y = y + params["bo"]
     return y

@@ -22,7 +22,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import constrain
+from repro.distributed.sharding import constrain, psum_if_tp
 from repro.models.common import activation_fn
 from repro.models.param import ParamSpec
 
@@ -66,9 +66,16 @@ def griffin_stat_sq(z: jax.Array) -> jax.Array:
 
     s_sq[b, j] = sum_t z[b,t,j]^2 / ||z[b,t]||^2  — token rows normalized
     to unit L2 before column-norms, all in fp32.
+
+    Under shard_map tensor parallelism ``z`` is shard-local along F, so
+    the per-token row norm is a partial sum — all-reduced across shards
+    (``psum_if_tp``) so every local column is normalized by the *global*
+    row norm; the statistic itself stays shard-local (the TP step
+    all-gathers it for host-side selection, see ``distributed.tp``).
     """
     zf = z.astype(jnp.float32)
     row = jnp.sum(jnp.square(zf), axis=-1, keepdims=True)  # [B,S,1]
+    row = psum_if_tp(row)
     inv = jnp.where(row > 0, 1.0 / row, 0.0)
     return jnp.sum(jnp.square(zf) * inv, axis=-2)  # [B,F]
 
@@ -98,7 +105,8 @@ def ffn_forward(
         }
         if want_z:
             stats["z"] = z
-    y = jnp.einsum("...f,fd->...d", z, params["w2"])
+    # sharded F axis -> the down-projection is a partial sum per shard
+    y = psum_if_tp(jnp.einsum("...f,fd->...d", z, params["w2"]))
     if "b2" in params:
         y = y + params["b2"]
     return y, stats
@@ -122,7 +130,9 @@ def ffn_forward_perslot(params: Dict, x: jax.Array, cfg) -> jax.Array:
         z = act(hg) * h1
     else:
         z = act(h1)
-    y = jnp.einsum("bsf,bfd->bsd", z, params["w2"])
+    # per-slot compacted experts shard along k (balanced per-shard
+    # selection): the down-projection is a partial sum per shard
+    y = psum_if_tp(jnp.einsum("bsf,bfd->bsd", z, params["w2"]))
     if "b2" in params:
         y = y + params["b2"][:, None]
     return y

@@ -89,6 +89,13 @@ def percentile(xs: List[float], p: float) -> float:
 class ServingMetrics:
     clock: Callable[[], float] = time.perf_counter
     requests: Dict[int, RequestTimeline] = field(default_factory=dict)
+    # wall-clock window: first submission -> latest observed event.
+    # Tracked explicitly (not reconstructed from finished requests) so
+    # ``tokens_per_sec`` stays honest on drains that end with aborts or
+    # zero completions — deriving the window from finished, non-aborted
+    # requests only inflated throughput (or divided by the 1e-9 guard).
+    first_submit_t: Optional[float] = None
+    last_event_t: Optional[float] = None
     steps: int = 0
     decode_steps: int = 0
     prefill_chunks: int = 0
@@ -115,32 +122,48 @@ class ServingMetrics:
     # the full narrowed block-table width for every slot)
     attn_bytes_read: List[float] = field(default_factory=list)
 
+    def _now(self, t: Optional[float] = None) -> float:
+        """Read the clock (or take a pre-read value) and extend the
+        wall-clock event window."""
+        t = self.clock() if t is None else t
+        if self.first_submit_t is not None:
+            self.last_event_t = t if self.last_event_t is None \
+                else max(self.last_event_t, t)
+        return t
+
     # -- request lifecycle -------------------------------------------------
     def on_submit(self, rid: int, prompt_tokens: int, priority: int = 0) -> None:
+        t = self.clock()
+        if self.first_submit_t is None:
+            self.first_submit_t = t
+        self._now(t)
         self.requests[rid] = RequestTimeline(
-            rid, priority=priority, submit_t=self.clock(),
+            rid, priority=priority, submit_t=t,
             prompt_tokens=prompt_tokens,
         )
 
     def on_prefill_chunk(self, rid: int) -> None:
         r = self.requests[rid]
+        t = self._now()
         if r.prefill_start_t is None:
-            r.prefill_start_t = self.clock()
+            r.prefill_start_t = t
         r.prefill_chunks += 1
         self.prefill_chunks += 1
 
     def on_first_token(self, rid: int) -> None:
         r = self.requests[rid]
+        t = self._now()
         if r.first_token_t is None:
-            r.first_token_t = self.clock()
+            r.first_token_t = t
         r.generated_tokens = max(r.generated_tokens, 1)
 
     def on_token(self, rid: int) -> None:
+        self._now()
         self.requests[rid].generated_tokens += 1
 
     def on_finish(self, rid: int, aborted: bool = False) -> None:
         r = self.requests[rid]
-        r.finish_t = self.clock()
+        r.finish_t = self._now()
         r.aborted = aborted
         if aborted:
             self.oom_aborts += 1
@@ -192,6 +215,7 @@ class ServingMetrics:
     def on_step(self, pool_in_use_frac: float, decode_batch: int,
                 shared_pages: int = 0,
                 attn_bytes_read: float = 0.0) -> None:
+        self._now()
         self.steps += 1
         if decode_batch:
             self.decode_steps += 1
@@ -204,18 +228,27 @@ class ServingMetrics:
     def summary(self) -> Dict[str, float]:
         done = [r for r in self.requests.values()
                 if r.finish_t is not None and not r.aborted]
+        aborted = [r for r in self.requests.values()
+                   if r.finish_t is not None and r.aborted]
         ttfts = [r.ttft for r in done if r.ttft is not None]
         tpots = [r.tpot for r in done if r.tpot is not None]
         queues = [r.queue_time for r in done if r.queue_time is not None]
         total_tokens = sum(r.generated_tokens for r in done)
-        t0 = min((r.submit_t for r in done), default=0.0)
-        t1 = max((r.finish_t for r in done), default=0.0)
-        wall = max(t1 - t0, 1e-9)
+        aborted_tokens = sum(r.generated_tokens for r in aborted)
+        # wall window: first submit -> latest event, tracked explicitly.
+        # The old finished-only reconstruction both inflated throughput
+        # (time spent on aborted work vanished from the denominator) and
+        # collapsed to the 1e-9 guard on all-abort drains.
+        wall = 0.0
+        if self.first_submit_t is not None and self.last_event_t is not None:
+            wall = self.last_event_t - self.first_submit_t
         return {
             "requests_finished": float(len(done)),
             "requests_aborted": float(self.oom_aborts),
             "generated_tokens": float(total_tokens),
-            "tokens_per_sec": total_tokens / wall,
+            "aborted_generated_tokens": float(aborted_tokens),
+            "wall_s": float(wall),
+            "tokens_per_sec": total_tokens / wall if wall > 0 else 0.0,
             "ttft_p50_s": percentile(ttfts, 50),
             "ttft_p95_s": percentile(ttfts, 95),
             "tpot_p50_s": percentile(tpots, 50),

@@ -40,6 +40,16 @@ TPU / gather elsewhere.  Outputs are token-identical either way
 through every jitted step, so XLA updates pages in place instead of
 copying the pool buffers every tick.
 
+Tensor parallelism (``mesh=...``): every jitted step runs shard_mapped
+over a 1-D ``model`` mesh axis (``distributed/tp.py``, DESIGN.md
+section 11) — KV pools and attention shard along ``kv_heads``
+(per-shard pool bytes exactly 1/N), FF weights (including the per-slot
+GRIFFIN-compacted experts, whose ``k_ff`` the selection pads to a
+multiple of N) along the hidden axis, block tables / positions / masks
+replicated.  All host logic in this file is mesh-agnostic; sharded
+serving is token-identical to the single-device path, which stays the
+differential oracle (``tests/test_sharded_serving.py``).
+
 Self-speculative decoding (``spec_k > 0``, requires ``gcfg``): the
 GRIFFIN-compacted per-request FF weights already installed in each
 decode slot double as a weight-sharing draft model — the paper's
@@ -115,11 +125,18 @@ class PagedServer:
         prefix_cache: bool = True,
         kernel_backend: str = "auto",
         metrics: Optional[ServingMetrics] = None,
+        mesh=None,
+        tp_axis: str = "model",
     ):
         assert decoder.supports_paged(cfg), (
             f"{cfg.name}: paged serving covers attention families only"
         )
         self.cfg, self.params = cfg, params
+        # GRIFFIN selection/compaction always runs on host single-device
+        # arrays (the compacted tree is per-request host state); under a
+        # mesh ``self.params`` becomes the sharded copy, so keep the
+        # original for ``extract_ffn_tree``
+        self._host_params = params
         self.gcfg = gcfg if (gcfg is not None and cfg.griffin and cfg.has_ffn) \
             else None
         self.pcfg = PagedConfig(
@@ -134,6 +151,25 @@ class PagedServer:
             )
         self.spec_k = spec_k
         self.backend = resolve_attn_backend(kernel_backend)
+        self.mesh = mesh
+        self.tp = None
+        if mesh is not None:
+            from repro.distributed.tp import PagedTP
+
+            self.tp = PagedTP(cfg, mesh, axis=tp_axis, backend=self.backend)
+            if self.gcfg is not None and (
+                self.gcfg.tp_shards != self.tp.n
+                or not self.gcfg.per_shard_topk
+            ):
+                # balanced shard-local selection with k_ff padded to a
+                # multiple of the axis — required for the all-gather-free
+                # compacted decode.  To reproduce sharded outputs on one
+                # device, pass the same gcfg (tp_shards=N) to the
+                # single-device server: the selection math is identical
+                # on one host (see repro.core.griffin docstring).
+                self.gcfg = self.gcfg.replace(
+                    tp_shards=self.tp.n, per_shard_topk=True
+                )
         self.sched = Scheduler(self.pcfg, n_slots, prefill_chunk,
                                metrics=metrics, prefix_cache=prefix_cache)
         self.sched.needs_stats = self.gcfg is not None
@@ -142,6 +178,33 @@ class PagedServer:
         self._next_rid = 0
         self._tick_attn_bytes = 0.0  # modeled KV read bytes, this tick
         backend = self.backend
+
+        if self.tp is not None:
+            # shard_map tensor parallelism (distributed/tp.py): pools
+            # shard along kv_heads, params along heads/mlp, host-side
+            # control (tables, positions, masks) replicated.  The step
+            # functions still donate the pools — donation composes with
+            # the NamedShardings because every step's out_specs equal
+            # its in_specs for the pool tree.
+            self._pool_pspecs = self.tp.pool_pspecs(num_pages, page_size)
+            self.pools = self.tp.shard_pools(self.pools, num_pages, page_size)
+            self.params = self.tp.shard_params(params)
+            tp, pool_specs = self.tp, self._pool_pspecs
+
+            def prefill_tp(params, pools, bt, tokens, pos, mask, pruned,
+                           collect):
+                fn = tp.prefill(pool_specs, collect, pruned)
+                return fn(params, pools, bt, tokens, pos, mask, pruned)
+
+            def decode_tp(params, pools, bts, toks, pos, mask, pruned):
+                fn = tp.decode(pool_specs, pruned)
+                return fn(params, pools, bts, toks, pos, mask, pruned)
+
+            self._prefill = prefill_tp
+            self._decode = decode_tp
+            self._verify = tp.verify(pool_specs)
+            self._cow_copy = tp.cow(pool_specs)
+            return
 
         # pools are donated through every step (argnums=1): XLA updates
         # the page buffers in place instead of copying every per-layer
@@ -287,6 +350,13 @@ class PagedServer:
         )
         if collect:
             part = decoder.prune_stats_tree(stats, self.cfg)
+            if self.tp is not None:
+                # pull the (mesh-replicated, already all-gathered) stats
+                # to host single-device arrays: selection/compaction mix
+                # them with host params, and eager ops across committed
+                # device sets are errors
+                part = jax.tree.map(lambda a: jnp.asarray(np.asarray(a)),
+                                    part)
             req.s_sq_acc = part if req.s_sq_acc is None else jax.tree.map(
                 jnp.add, req.s_sq_acc, part
             )
@@ -297,8 +367,13 @@ class PagedServer:
         if work.is_last and req.state == DECODING and self.gcfg is not None:
             if not req.compacted:
                 sel = griffin_lib.select_tree(req.s_sq_acc, self.gcfg)
-                ffn_tree = decoder.extract_ffn_tree(self.params, self.cfg)
-                req.pruned_host = griffin_lib.compact_tree(ffn_tree, sel)
+                ffn_tree = decoder.extract_ffn_tree(self._host_params,
+                                                    self.cfg)
+                # tp_shards > 1: shard-local balanced gather (identical
+                # weights, collective-free layout under the mesh)
+                req.pruned_host = griffin_lib.compact_tree(
+                    ffn_tree, sel, shards=self.gcfg.tp_shards
+                )
                 req.compacted = True
                 req.s_sq_acc = None
             self._install_pruned(req.slot, req.pruned_host)
@@ -482,6 +557,11 @@ class PagedServer:
                         for k, v in ffn.items()
                     }
             self.pruned_slots = out
+            if self.tp is not None:
+                # commit the slot buffers mlp-sharded on the mesh so the
+                # compacted weights never replicate (the regression the
+                # divisible-k_ff rule exists to prevent)
+                self.pruned_slots = self.tp.shard_pruned(self.pruned_slots)
             return
         for seg, layers in pruned1.items():
             for name, ffn in layers.items():
@@ -491,3 +571,5 @@ class PagedServer:
                         buf[k] = buf[k].at[:, slot].set(v)
                     else:
                         buf[k] = buf[k].at[slot].set(v)
+        if self.tp is not None:
+            self.pruned_slots = self.tp.shard_pruned(self.pruned_slots)

@@ -1,0 +1,139 @@
+"""Serving-telemetry edge cases (ISSUE 5 satellite): the wall-clock
+window is tracked explicitly (first submit -> last event), so
+``tokens_per_sec`` stays honest on drains that finish nothing, abort
+everything, or span several ``drain()`` calls on one server.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import decoder
+from repro.serving.metrics import ServingMetrics, percentile
+from repro.serving.server import PagedServer
+
+
+def test_percentile_empty_is_zero():
+    """The 0.0-on-empty convention every summary key relies on."""
+    assert percentile([], 50) == 0.0
+    assert percentile([], 95) == 0.0
+    assert percentile([1.0, 3.0], 50) == 2.0
+
+
+def test_summary_zero_finished_requests():
+    t = [0.0]
+    m = ServingMetrics(clock=lambda: t[0])
+    m.on_submit(0, prompt_tokens=8)
+    t[0] = 2.0
+    m.on_step(0.5, 0)
+    s = m.summary()
+    assert s["requests_finished"] == 0.0
+    assert s["generated_tokens"] == 0.0
+    assert s["tokens_per_sec"] == 0.0  # no finished tokens, no nonsense
+    assert s["wall_s"] == 2.0  # window still real: submit -> last step
+    assert s["ttft_p50_s"] == 0.0
+
+
+def test_summary_all_aborted_trace():
+    """Aborted requests' tokens are reported separately and the window
+    covers the time spent on them — the old finished-only
+    reconstruction collapsed wall to the epsilon guard here and
+    reported a meaningless tokens_per_sec."""
+    t = [0.0]
+    m = ServingMetrics(clock=lambda: t[0])
+    for rid in (0, 1):
+        m.on_submit(rid, prompt_tokens=8)
+        m.on_first_token(rid)
+        t[0] += 1.0
+        m.on_token(rid)
+        m.on_finish(rid, aborted=True)
+    s = m.summary()
+    assert s["requests_finished"] == 0.0
+    assert s["requests_aborted"] == 2.0
+    assert s["aborted_generated_tokens"] == 4.0  # 2 tokens per request
+    assert s["generated_tokens"] == 0.0
+    assert s["tokens_per_sec"] == 0.0
+    assert s["wall_s"] == 2.0
+
+
+def test_summary_mixed_abort_window():
+    """A finished request followed by a long aborted straggler: the
+    straggler's wall time must count in the denominator (the old code
+    measured only up to the last *finished* request — inflated)."""
+    t = [0.0]
+    m = ServingMetrics(clock=lambda: t[0])
+    m.on_submit(0, prompt_tokens=4)
+    m.on_first_token(0)
+    t[0] = 1.0
+    for _ in range(9):
+        m.on_token(0)
+    m.on_finish(0)  # 10 tokens in 1s
+    m.on_submit(1, prompt_tokens=4)
+    t[0] = 9.0
+    m.on_finish(1, aborted=True)
+    s = m.summary()
+    assert s["generated_tokens"] == 10.0
+    assert s["wall_s"] == 9.0
+    assert s["tokens_per_sec"] == pytest.approx(10.0 / 9.0)
+
+
+# ---------------------------------------------------------------------------
+# Server-level: abort-only drain + counter integrity across two drains
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinylm")
+    params = decoder.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_server_abort_only_drain_summary(tiny):
+    """A request that can never fit the pool aborts; the drain finishes
+    nothing and the summary must stay well-defined."""
+    cfg, params = tiny
+    srv = PagedServer(cfg, params, page_size=8, num_pages=2, n_slots=2,
+                      prefill_chunk=16, max_len=64, prefix_cache=False)
+    rng = np.random.default_rng(0)
+    srv.submit(rng.integers(0, cfg.vocab_size, size=40).astype(np.int32),
+               max_new=4, rid=0)
+    out = srv.drain()
+    assert out == {}
+    s = srv.metrics.summary()
+    assert s["requests_finished"] == 0.0
+    assert s["requests_aborted"] == 1.0
+    assert s["tokens_per_sec"] == 0.0
+    assert s["wall_s"] >= 0.0
+
+
+def test_server_counters_across_two_drains(tiny):
+    """One server, two submit+drain waves: counters accumulate, the
+    wall window spans the first submit to the last event, and
+    tokens_per_sec reflects the whole session."""
+    cfg, params = tiny
+    srv = PagedServer(cfg, params, page_size=8, num_pages=32, n_slots=2,
+                      prefill_chunk=16, max_len=64, prefix_cache=False)
+    rng = np.random.default_rng(1)
+    max_new = 5
+    for rid in range(2):
+        srv.submit(rng.integers(0, cfg.vocab_size, size=12).astype(np.int32),
+                   max_new=max_new, rid=rid)
+    out1 = srv.drain()
+    s1 = srv.metrics.summary()
+    steps1 = s1["steps"]
+    assert s1["requests_finished"] == 2.0
+    for rid in range(2, 4):
+        srv.submit(rng.integers(0, cfg.vocab_size, size=12).astype(np.int32),
+                   max_new=max_new, rid=rid)
+    out2 = srv.drain()
+    s2 = srv.metrics.summary()
+    # drain() reports the cumulative finished map
+    assert set(out1) == {0, 1} and set(out2) == {0, 1, 2, 3}
+    assert s2["requests_finished"] == 4.0
+    assert s2["generated_tokens"] == 4.0 * max_new
+    assert s2["steps"] > steps1  # monotone across drains
+    assert s2["wall_s"] > s1["wall_s"]  # window extends to wave 2
+    assert s2["tokens_per_sec"] > 0.0
+    # pool fully released between/after waves
+    assert srv.sched.alloc.num_in_use == 0
+    srv.sched.alloc.check()

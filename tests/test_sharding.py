@@ -1,9 +1,11 @@
 """Sharding-rule resolution unit tests (AbstractMesh — no devices)."""
+import warnings
+
 import jax
 import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
-from repro.distributed.sharding import make_rules, spec_for
+from repro.distributed.sharding import make_paged_tp_rules, make_rules, spec_for
 from repro.models.param import ParamSpec
 
 def _abstract_mesh(axis_sizes, axis_names):
@@ -55,6 +57,52 @@ def test_expert_2d():
     rules = make_rules(phase="train", expert_2d=True)
     s = spec_for(("experts", "embed", "mlp"), rules, MESH1, (256, 7168, 2048))
     assert s == P(("data", "model"))
+
+
+def test_divisibility_drop_warns_once():
+    """Dropping a mesh axis for divisibility is an N× memory regression
+    in disguise — it must warn, exactly once per distinct drop."""
+    from repro.distributed import sharding as shlib
+
+    shlib._div_warned.clear()  # idempotent under pytest-repeat/reorder
+    rules = make_rules(phase="serve")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        s = spec_for(("embed", "heads"), rules, MESH1, (4096, 17))
+        assert s == P()  # 17 heads can't shard 16 ways
+        drops = [x for x in w if "dropping mesh axis" in str(x.message)]
+        assert len(drops) == 1
+        assert "17" in str(drops[0].message)
+        # identical drop again: already warned, stays quiet
+        spec_for(("embed", "heads"), rules, MESH1, (4096, 17))
+        drops = [x for x in w if "dropping mesh axis" in str(x.message)]
+        assert len(drops) == 1
+
+
+def test_compacted_ffn_stays_sharded_under_model_axis():
+    """Regression (ISSUE 5): GRIFFIN compaction shrinks d_ff to k_ff;
+    with tp_shards set, k_ff is padded to a shard multiple so the
+    compacted FF weights keep their ``model``-axis sharding instead of
+    silently replicating."""
+    from repro.core.griffin import GriffinConfig
+
+    rules = make_paged_tp_rules()
+    F, D = 1024, 512
+    gcfg = GriffinConfig(sparsity=0.45, tp_shards=16)
+    k = gcfg.k_of(F)  # naive round(563.2) = 563 would drop the axis
+    assert k % 16 == 0
+    s = spec_for(("embed", "mlp"), rules, MESH1, (D, k))
+    assert s == P(None, "model")
+    s = spec_for(("mlp", "embed"), rules, MESH1, (k, D))
+    assert s == P("model")
+    # without the padding, the same width replicates (and warns)
+    from repro.distributed import sharding as shlib
+
+    shlib._div_warned.clear()  # idempotent under pytest-repeat/reorder
+    naive_k = GriffinConfig(sparsity=0.45).k_of(F)
+    with pytest.warns(UserWarning, match="dropping mesh axis"):
+        s = spec_for(("embed", "mlp"), rules, MESH1, (D, naive_k))
+    assert s == P()
 
 
 def test_pruned_ffn_divisible_for_all_griffin_archs():
