@@ -15,7 +15,7 @@ import json
 import sys
 import time
 from pathlib import Path
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
 
@@ -119,4 +119,40 @@ def write_bench_json(bench: str, rows: List[Dict[str, Any]],
     if extra:
         payload["data"] = extra
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return path
+
+
+# -- trace artifacts (benchmarks/run.py --trace-dir) ------------------------
+
+_TRACE_DIR: Optional[Path] = None
+
+
+def set_trace_dir(path: Optional[str]) -> None:
+    """Enable per-benchmark trace artifacts: with a directory set,
+    ``bench_tracer`` hands out live tracers and ``save_trace`` writes
+    ``TRACE_<name>.json`` Chrome traces next to the BENCH JSONs."""
+    global _TRACE_DIR
+    _TRACE_DIR = Path(path) if path else None
+
+
+def bench_tracer():
+    """A fresh ``repro.obs.trace.Tracer`` when ``--trace-dir`` is
+    active, else None (PagedServer treats None as hooks-off)."""
+    if _TRACE_DIR is None:
+        return None
+    from repro.obs.trace import Tracer
+
+    return Tracer()
+
+
+def save_trace(name: str, tracer) -> Optional[Path]:
+    """Validate + write one benchmark run's trace as
+    ``TRACE_<name>.json`` under the ``--trace-dir`` directory."""
+    if tracer is None or _TRACE_DIR is None:
+        return None
+    from repro.obs.export import write_trace
+
+    path = write_trace(tracer, _TRACE_DIR / f"TRACE_{name}.json",
+                       meta={"bench": name})
+    print(f"# trace ({len(tracer.events)} events) -> {path}")
     return path

@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Trace / metrics artifact validator for CI (the tier-1 obs gate).
+
+Validates a ``--trace-out`` Chrome trace JSON against the exporter's
+own invariants (schema fields, ``X`` spans properly nested per thread,
+async ``b``/``n``/``e`` request lifecycles paired and ordered — see
+``repro.obs.export.validate_chrome_trace``) and, optionally, a
+``--metrics-snapshot`` Prometheus exposition against the text-format
+rules (``repro.obs.registry.validate_prometheus_text``).
+
+  python scripts/check_trace.py /tmp/obs/trace.json \
+      --prom /tmp/obs/metrics.prom
+
+Exit code 0 iff every artifact validates; each violation is printed as
+``file: msg``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.export import validate_chrome_trace
+from repro.obs.registry import validate_prometheus_text
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace JSON (--trace-out output)")
+    ap.add_argument("--prom", default=None,
+                    help="Prometheus text exposition (--metrics-snapshot "
+                         "output) to validate alongside")
+    ap.add_argument("--min-events", type=int, default=1,
+                    help="fail when the trace has fewer traceEvents "
+                         "(catches an empty trace that trivially "
+                         "validates)")
+    args = ap.parse_args()
+
+    errs = 0
+    obj = json.loads(Path(args.trace).read_text())
+    events = obj.get("traceEvents", [])
+    for msg in validate_chrome_trace(obj):
+        print(f"{args.trace}: {msg}")
+        errs += 1
+    if len(events) < args.min_events:
+        print(f"{args.trace}: only {len(events)} traceEvents "
+              f"(--min-events {args.min_events})")
+        errs += 1
+    phases = sorted({e.get("ph") for e in events})
+    print(f"{args.trace}: {len(events)} events, phases={phases}, "
+          f"{'INVALID' if errs else 'ok'}")
+
+    if args.prom:
+        text = Path(args.prom).read_text()
+        perrs = validate_prometheus_text(text)
+        for msg in perrs:
+            print(f"{args.prom}: {msg}")
+        errs += len(perrs)
+        n = sum(1 for l in text.splitlines() if l.startswith("# TYPE"))
+        print(f"{args.prom}: {n} metric families, "
+              f"{'INVALID' if perrs else 'ok'}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -138,6 +138,12 @@ class PagedTP:
         self.cfg_local = cfg.replace(
             num_heads=cfg.num_heads // n, num_kv_heads=cfg.num_kv_heads // n
         )
+        # logical shard ids for per-shard step-time attribution
+        # (obs.stragglers): single-process SPMD steps are synchronous,
+        # so the host wall time is charged to every shard — an upper
+        # bound per shard; a real multi-host deployment records each
+        # process's own shard time instead
+        self.shard_ids = tuple(range(n))
         self.rules = shlib.make_paged_tp_rules(axis)
         self.param_specs = tree_map_specs(
             lambda s: shlib.spec_for(s.axes, self.rules, mesh, s.shape),
@@ -251,6 +257,34 @@ class PagedTP:
                 (self.param_specs, pool_specs, P(), P(), P(), P(), pr_specs),
                 (P(), pool_specs),
                 donate=(1,),
+            )
+        return self._steps[key]
+
+    def probe(self, pool_specs: Any) -> Callable:
+        """Dense stats-only decode step for flocking telemetry
+        (``obs.flocking``): runs the un-pruned model with
+        ``collect_stats`` over the live paged KV and returns only the
+        all-gathered statistic tree.  Pools are **not** donated — the
+        caller discards the step's writes, so serving state is
+        untouched and the next real decode sees identical pools."""
+        key = ("probe",)
+        if key not in self._steps:
+            cfg_l, axis, backend = self.cfg_local, self.axis, self.backend
+
+            def local(params, pools, bts, toks, pos, mask):
+                with shlib.tp_axis(axis):
+                    _, _, stats = decoder.decode_step_paged(
+                        params, cfg_l, pools, bts, toks, pos,
+                        write_mask=mask, pruned=None, collect_stats=True,
+                        backend=backend,
+                    )
+                return gather_stats(stats, axis)
+
+            self._steps[key] = self._wrap(
+                local,
+                (self.param_specs, pool_specs, P(), P(), P(), P()),
+                P(),
+                donate=(),
             )
         return self._steps[key]
 

@@ -85,6 +85,23 @@ def main() -> None:
                          "experts along the FF hidden axis; output is "
                          "token-identical to single-device serving")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record the drain as structured spans and write "
+                         "a Chrome/Perfetto trace.json (open in "
+                         "chrome://tracing or ui.perfetto.dev)")
+    ap.add_argument("--metrics-snapshot", default=None, metavar="PATH",
+                    help="write end-of-drain metrics: .json -> JSON "
+                         "snapshot, anything else -> Prometheus text "
+                         "exposition")
+    ap.add_argument("--flocking-telemetry", type=int, default=0,
+                    metavar="N",
+                    help="probe GRIFFIN expert-selection stability every "
+                         "N decode ticks (Jaccard + angular drift per "
+                         "layer; requires GRIFFIN; 0 = off)")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace of the "
+                         "drain into DIR (with --trace-out, jitted steps "
+                         "also get TraceAnnotation markers)")
     args = ap.parse_args()
 
     if args.arch in ("tinylm", "tinylm-tp"):
@@ -122,6 +139,18 @@ def main() -> None:
                  f"{cfg.name} falls back to the slot batcher")
     if args.spec_k:
         mode += f"+spec{args.spec_k}"
+    obs_flags = (args.trace_out, args.metrics_snapshot,
+                 args.flocking_telemetry, args.jax_profile)
+    if any(obs_flags) and not decoder.supports_paged(cfg):
+        ap.error(f"observability flags need the paged serving path; "
+                 f"{cfg.name} falls back to the slot batcher")
+    if args.flocking_telemetry and gcfg is None:
+        ap.error("--flocking-telemetry requires GRIFFIN "
+                 "(drop --no-griffin)")
+    tracer = None
+    if args.trace_out:
+        from repro.obs.trace import Tracer
+        tracer = Tracer(annotate_jax=bool(args.jax_profile))
     mesh = None
     if args.mesh is not None:
         axis, n = args.mesh
@@ -140,12 +169,18 @@ def main() -> None:
             spec_k=args.spec_k, prefix_cache=not args.no_prefix_cache,
             kernel_backend=args.kernel_backend, mesh=mesh,
             tp_axis=args.mesh[0] if args.mesh else "model",
+            tracer=tracer, flocking_every=args.flocking_telemetry,
         )
         for rid, (prompt, gen) in enumerate(reqs):
             srv.submit(prompt, max_new=gen, rid=rid)
+        if args.jax_profile:
+            jax.profiler.start_trace(args.jax_profile)
         t0 = time.perf_counter()
         results = srv.drain()
         dt = time.perf_counter() - t0
+        if args.jax_profile:
+            jax.profiler.stop_trace()
+            print(f"[obs] jax profile -> {args.jax_profile}")
         total = sum(len(v) for v in results.values())
         m = srv.metrics.summary()
         print(f"[{mode}] paged: served {args.requests} requests / {total} "
@@ -162,6 +197,23 @@ def main() -> None:
             print(f"  spec: acceptance={m['acceptance_rate']:.3f} "
                   f"tokens/verify={m['tokens_per_verify']:.2f} "
                   f"rounds={m['spec_rounds']:.0f}")
+        if args.flocking_telemetry and srv.flocking is not None \
+                and srv.flocking.last:
+            vals = list(srv.flocking.last.values())
+            jac = float(np.mean([v["jaccard"] for v in vals]))
+            ang = float(np.mean([v["angular"] for v in vals]))
+            print(f"  flocking: jaccard={jac:.3f} angular={ang:.3f} "
+                  f"({len(vals)} requests probed every "
+                  f"{args.flocking_telemetry} ticks)")
+        if tracer is not None:
+            from repro.obs.export import write_trace
+            path = write_trace(tracer, args.trace_out,
+                               meta={"mode": mode,
+                                     "requests": args.requests})
+            print(f"[obs] trace ({len(tracer.events)} events) -> {path}")
+        if args.metrics_snapshot:
+            path = srv.metrics.write_snapshot(args.metrics_snapshot)
+            print(f"[obs] metrics snapshot -> {path}")
         return
 
     cb = ContinuousBatcher(cfg, params, n_slots=args.slots,

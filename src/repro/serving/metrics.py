@@ -28,14 +28,32 @@ full narrowed block-table width).  ``attn_bytes_per_token`` in
 ``summary()`` is the number the ``decode_attn`` benchmark tracks.  Per-request,
 ``prefix_hit_tokens`` records the matched prefix length — the warm/cold
 TTFT split in ``benchmarks/run.py --only prefix`` comes from it.
+
+Observability (DESIGN.md section 12): the per-step gauges live in
+fixed-bucket streaming histograms on an ``obs.Registry`` — bounded
+memory regardless of uptime, where the old per-step Python lists grew
+forever.  The histograms carry exact ``sum``/``count``, so every mean
+and total in ``summary()`` is numerically identical to the old
+list-based view; only quantiles are bucket-interpolated.  A ``tracer``
+(``obs.trace.Tracer``; the no-op ``NULL_TRACER`` by default) receives
+the request lifecycle as async spans — emitted *here*, with the same
+clock reads the timelines record, so a trace reconciles exactly with
+``summary()``.  ``prometheus_text()`` / ``snapshot()`` export the
+registry; abort accounting distinguishes pool-exhaustion (``oom``)
+from client ``cancelled`` aborts.
 """
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
+
+from repro.obs.registry import Registry, exp_buckets, linear_buckets
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclass
@@ -51,6 +69,7 @@ class RequestTimeline:
     prefill_chunks: int = 0
     preemptions: int = 0
     aborted: bool = False
+    abort_reason: Optional[str] = None  # "oom" | "cancelled" when aborted
     draft_tokens: int = 0
     accepted_draft_tokens: int = 0
     spec_rounds: int = 0
@@ -85,9 +104,21 @@ def percentile(xs: List[float], p: float) -> float:
     return float(np.percentile(np.asarray(xs, np.float64), p)) if xs else 0.0
 
 
+# Histogram buckets for the per-step gauges.  Occupancy is a fraction
+# (bucket width 0.05); batch sizes get unit-width buckets so their
+# quantiles are exact up to 64; page/byte gauges are geometric with an
+# explicit 0 bucket (idle ticks).
+POOL_OCCUPANCY_BUCKETS = linear_buckets(0.05, 1.0, 20)
+DECODE_BATCH_BUCKETS = linear_buckets(0.0, 64.0, 65)
+SHARED_PAGES_BUCKETS = (0.0,) + exp_buckets(1.0, 2.0, 15)
+ATTN_BYTES_BUCKETS = (0.0,) + exp_buckets(4096.0, 2.0, 28)
+
+
 @dataclass
 class ServingMetrics:
     clock: Callable[[], float] = time.perf_counter
+    tracer: Any = NULL_TRACER  # obs.trace.Tracer when tracing is on
+    registry: Registry = field(default_factory=Registry)
     requests: Dict[int, RequestTimeline] = field(default_factory=dict)
     # wall-clock window: first submission -> latest observed event.
     # Tracked explicitly (not reconstructed from finished requests) so
@@ -101,8 +132,7 @@ class ServingMetrics:
     prefill_chunks: int = 0
     preemptions: int = 0
     oom_aborts: int = 0
-    pool_occupancy: List[float] = field(default_factory=list)  # in-use frac
-    decode_batch_sizes: List[int] = field(default_factory=list)
+    cancelled_aborts: int = 0
     # speculative decoding (one round = k draft steps + 1 verify step)
     spec_rounds: int = 0
     draft_tokens: int = 0
@@ -114,13 +144,28 @@ class ServingMetrics:
     saved_prefill_tokens: int = 0
     prefix_inserts: int = 0
     prefix_evictions: int = 0
+    prefix_evicted_refs: int = 0  # refs released across evictions
     cow_copies: int = 0
-    shared_pages: List[int] = field(default_factory=list)  # per-step gauge
-    # modeled HBM bytes of paged KV read by attention per tick (per-step
-    # gauge; the server models it from the kernel backend: the fused
-    # kernel streams only owned pages, the gather oracle materializes
-    # the full narrowed block-table width for every slot)
-    attn_bytes_read: List[float] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        # per-step gauges as streaming histograms (bounded; the exact
+        # running sum/count keeps summary() means identical to the old
+        # per-step lists)
+        self.pool_occupancy = self.registry.histogram(
+            "serving_pool_occupancy", buckets=POOL_OCCUPANCY_BUCKETS,
+            help="Pool in-use fraction per tick")
+        self.decode_batch_sizes = self.registry.histogram(
+            "serving_decode_batch", buckets=DECODE_BATCH_BUCKETS,
+            help="Decode batch size per tick")
+        self.shared_pages = self.registry.histogram(
+            "serving_shared_pages", buckets=SHARED_PAGES_BUCKETS,
+            help="Multiply-referenced pool pages per tick")
+        # modeled HBM bytes of paged KV read by attention per tick (the
+        # fused kernel streams only owned pages, the gather oracle
+        # materializes the full narrowed block-table width per slot)
+        self.attn_bytes_read = self.registry.histogram(
+            "serving_attn_bytes_read", buckets=ATTN_BYTES_BUCKETS,
+            help="Modeled HBM bytes of paged KV read by attention per tick")
 
     def _now(self, t: Optional[float] = None) -> float:
         """Read the clock (or take a pre-read value) and extend the
@@ -141,6 +186,8 @@ class ServingMetrics:
             rid, priority=priority, submit_t=t,
             prompt_tokens=prompt_tokens,
         )
+        self.tracer.abegin(rid, "request", ts=t,
+                           prompt_tokens=prompt_tokens, priority=priority)
 
     def on_prefill_chunk(self, rid: int) -> None:
         r = self.requests[rid]
@@ -149,24 +196,45 @@ class ServingMetrics:
             r.prefill_start_t = t
         r.prefill_chunks += 1
         self.prefill_chunks += 1
+        self.tracer.ainstant(rid, "prefill_chunk", ts=t,
+                             chunk=r.prefill_chunks)
 
     def on_first_token(self, rid: int) -> None:
         r = self.requests[rid]
         t = self._now()
         if r.first_token_t is None:
             r.first_token_t = t
+            self.tracer.ainstant(rid, "first_token", ts=t)
         r.generated_tokens = max(r.generated_tokens, 1)
 
     def on_token(self, rid: int) -> None:
         self._now()
         self.requests[rid].generated_tokens += 1
 
-    def on_finish(self, rid: int, aborted: bool = False) -> None:
+    def on_finish(self, rid: int, aborted: bool = False,
+                  reason: str = "oom") -> None:
+        """Finish a request.  ``reason`` applies only when ``aborted``:
+        ``"oom"`` (pool exhaustion — the scheduler's only abort) or
+        ``"cancelled"`` (client-side, ``PagedServer.cancel``)."""
         r = self.requests[rid]
-        r.finish_t = self._now()
+        t = self._now()
+        r.finish_t = t
         r.aborted = aborted
         if aborted:
-            self.oom_aborts += 1
+            r.abort_reason = reason
+            if reason == "oom":
+                self.oom_aborts += 1
+            else:
+                self.cancelled_aborts += 1
+        # end the request span with the timeline's own aggregates so a
+        # trace reconciles with summary() exactly, not just closely
+        self.tracer.aend(
+            rid, "request", ts=t,
+            generated_tokens=r.generated_tokens,
+            ttft_s=r.ttft, preemptions=r.preemptions,
+            spec_rounds=r.spec_rounds, prefill_chunks=r.prefill_chunks,
+            cow_copies=r.cow_copies, aborted=aborted,
+            reason=r.abort_reason)
 
     def on_spec_round(self, rid: int, drafted: int, accepted: int,
                       committed: int) -> None:
@@ -181,10 +249,14 @@ class ServingMetrics:
         self.draft_tokens += drafted
         self.accepted_draft_tokens += accepted
         self.spec_committed_tokens += committed
+        self.tracer.ainstant(rid, "spec_round", drafted=drafted,
+                             accepted=accepted, committed=committed)
 
     def on_preemption(self, rid: int) -> None:
-        self.requests[rid].preemptions += 1
+        r = self.requests[rid]
+        r.preemptions += 1
         self.preemptions += 1
+        self.tracer.ainstant(rid, "preempt", preemptions=r.preemptions)
 
     # -- prefix cache ------------------------------------------------------
     def on_prefix_lookup(self, rid: int, hit_tokens: int) -> None:
@@ -197,12 +269,19 @@ class ServingMetrics:
             r = self.requests.get(rid)
             if r is not None:
                 r.prefix_hit_tokens = max(r.prefix_hit_tokens, hit_tokens)
+            self.tracer.ainstant(rid, "prefix_hit", hit_tokens=hit_tokens)
 
     def on_prefix_insert(self, rid: int, tokens: int) -> None:
         self.prefix_inserts += 1
 
     def on_prefix_evict(self, refs_released: int) -> None:
+        """One trie leaf evicted under pool pressure; ``refs_released``
+        is how many page references it dropped — the size signal that
+        distinguishes a 1-page leaf from a long chain."""
         self.prefix_evictions += 1
+        self.prefix_evicted_refs += refs_released
+        self.tracer.instant("prefix_evict", cat="cache",
+                            refs_released=refs_released)
 
     def on_cow(self, rid: int) -> None:
         """One copy-on-write page fork (one device page copy)."""
@@ -210,6 +289,7 @@ class ServingMetrics:
         r = self.requests.get(rid)
         if r is not None:
             r.cow_copies += 1
+        self.tracer.ainstant(rid, "cow")
 
     # -- per-step gauges ---------------------------------------------------
     def on_step(self, pool_in_use_frac: float, decode_batch: int,
@@ -219,10 +299,10 @@ class ServingMetrics:
         self.steps += 1
         if decode_batch:
             self.decode_steps += 1
-        self.pool_occupancy.append(pool_in_use_frac)
-        self.decode_batch_sizes.append(decode_batch)
-        self.shared_pages.append(shared_pages)
-        self.attn_bytes_read.append(attn_bytes_read)
+        self.pool_occupancy.observe(pool_in_use_frac)
+        self.decode_batch_sizes.observe(decode_batch)
+        self.shared_pages.observe(shared_pages)
+        self.attn_bytes_read.observe(attn_bytes_read)
 
     # -- aggregation -------------------------------------------------------
     def summary(self) -> Dict[str, float]:
@@ -244,7 +324,9 @@ class ServingMetrics:
             wall = self.last_event_t - self.first_submit_t
         return {
             "requests_finished": float(len(done)),
-            "requests_aborted": float(self.oom_aborts),
+            "requests_aborted": float(self.oom_aborts + self.cancelled_aborts),
+            "requests_aborted_oom": float(self.oom_aborts),
+            "requests_aborted_cancelled": float(self.cancelled_aborts),
             "generated_tokens": float(total_tokens),
             "aborted_generated_tokens": float(aborted_tokens),
             "wall_s": float(wall),
@@ -256,10 +338,8 @@ class ServingMetrics:
             "preemptions": float(self.preemptions),
             "prefill_chunks": float(self.prefill_chunks),
             "steps": float(self.steps),
-            "pool_occupancy_mean": float(np.mean(self.pool_occupancy))
-            if self.pool_occupancy else 0.0,
-            "decode_batch_mean": float(np.mean(self.decode_batch_sizes))
-            if self.decode_batch_sizes else 0.0,
+            "pool_occupancy_mean": self.pool_occupancy.mean,
+            "decode_batch_mean": self.decode_batch_sizes.mean,
             "spec_rounds": float(self.spec_rounds),
             "draft_tokens": float(self.draft_tokens),
             "acceptance_rate": self.accepted_draft_tokens / self.draft_tokens
@@ -271,14 +351,55 @@ class ServingMetrics:
             "saved_prefill_tokens": float(self.saved_prefill_tokens),
             "prefix_inserts": float(self.prefix_inserts),
             "prefix_evictions": float(self.prefix_evictions),
+            "prefix_evicted_refs": float(self.prefix_evicted_refs),
             "cow_copies": float(self.cow_copies),
-            "shared_pages_mean": float(np.mean(self.shared_pages))
-            if self.shared_pages else 0.0,
-            "attn_bytes_read_total": float(np.sum(self.attn_bytes_read))
-            if self.attn_bytes_read else 0.0,
-            "attn_bytes_read_mean": float(np.mean(self.attn_bytes_read))
-            if self.attn_bytes_read else 0.0,
+            "shared_pages_mean": self.shared_pages.mean,
+            "attn_bytes_read_total": self.attn_bytes_read.sum,
+            "attn_bytes_read_mean": self.attn_bytes_read.mean,
             "attn_bytes_per_token": (
-                float(np.sum(self.attn_bytes_read)) / total_tokens
-            ) if (self.attn_bytes_read and total_tokens) else 0.0,
+                self.attn_bytes_read.sum / total_tokens
+            ) if (self.attn_bytes_read.count and total_tokens) else 0.0,
         }
+
+    # -- export ------------------------------------------------------------
+    # summary() keys that are monotone counts; the rest export as gauges
+    _COUNTER_KEYS = frozenset({
+        "requests_finished", "requests_aborted", "requests_aborted_oom",
+        "requests_aborted_cancelled", "generated_tokens",
+        "aborted_generated_tokens", "preemptions", "prefill_chunks",
+        "steps", "spec_rounds", "draft_tokens", "saved_prefill_tokens",
+        "prefix_inserts", "prefix_evictions", "prefix_evicted_refs",
+        "cow_copies",
+    })
+
+    def _sync_registry(self) -> None:
+        """Mirror the scalar summary into the registry so one exposition
+        carries both the histograms and the counters."""
+        for key, value in self.summary().items():
+            name = f"serving_{key}"
+            if key in self._COUNTER_KEYS:
+                self.registry.counter(name).set(value)
+            else:
+                self.registry.gauge(name).set(value)
+
+    def prometheus_text(self) -> str:
+        self._sync_registry()
+        return self.registry.prometheus_text()
+
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-serializable snapshot: the summary view plus every
+        registry metric (histogram buckets included)."""
+        self._sync_registry()
+        return {"summary": self.summary(),
+                "metrics": self.registry.snapshot()["metrics"]}
+
+    def write_snapshot(self, path: Union[str, Path]) -> Path:
+        """Write the snapshot: ``.json`` -> JSON, anything else ->
+        Prometheus text exposition."""
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        if path.suffix == ".json":
+            path.write_text(json.dumps(self.snapshot(), indent=2))
+        else:
+            path.write_text(self.prometheus_text())
+        return path

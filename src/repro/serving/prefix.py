@@ -104,6 +104,24 @@ class PrefixCache:
         """Pages referenced by the trie (disjoint across nodes)."""
         return sum(len(n.pages) for n in self.nodes.values())
 
+    def stats(self) -> Dict[str, float]:
+        """Trie shape gauges for telemetry exports (``obs.registry``):
+        node/page counts, leaf count, deepest cached prefix in tokens,
+        and how many trie pages live requests co-hold."""
+        leaves = sum(1 for n in self.nodes.values() if not n.children)
+        shared = sum(
+            1 for n in self.nodes.values() for p in n.pages
+            if self.alloc.ref_count(p) > 1
+        )
+        return {
+            "nodes": float(len(self.nodes)),
+            "leaves": float(leaves),
+            "pages": float(self.num_pages),
+            "shared_pages": float(shared),
+            "max_prefix_tokens": float(
+                max((n.length for n in self.nodes.values()), default=0)),
+        }
+
     # -- walk --------------------------------------------------------------
     def _descend(self, prompt: np.ndarray, max_len: int) -> List[PrefixNode]:
         """Path of fully-matched nodes (root excluded), deepest last,

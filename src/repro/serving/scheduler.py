@@ -313,14 +313,37 @@ class Scheduler:
         if need_stats:
             req.s_sq_acc = m.s_sq
 
-    def _abort(self, req: ScheduledRequest) -> None:
+    def _abort(self, req: ScheduledRequest, reason: str = "oom") -> None:
         self.alloc.free_request(req.rid)
         req.table = BlockTable()
         req.state = FINISHED
         req.aborted = True
         req.slot = None
         self.finished[req.rid] = req
-        self.metrics.on_finish(req.rid, aborted=True)
+        self.metrics.on_finish(req.rid, aborted=True, reason=reason)
+
+    def cancel(self, rid: int) -> bool:
+        """Client-side abort: drop the request wherever it lives and
+        free its pages.  Returns False for unknown/finished rids.  Call
+        between ``plan_step`` executions only — the server's ``cancel``
+        wrapper guarantees that; cancelling a request the in-flight plan
+        still references would free pages the step is about to write."""
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                self._abort(req, reason="cancelled")
+                return True
+        if self.prefilling is not None and self.prefilling.rid == rid:
+            req = self.prefilling
+            self.prefilling = None
+            self._abort(req, reason="cancelled")
+            return True
+        for req in self.decoding:
+            if req.rid == rid:
+                self.decoding.remove(req)
+                self._abort(req, reason="cancelled")
+                return True
+        return False
 
     # -- planning ----------------------------------------------------------
     def plan_step(self) -> StepPlan:

@@ -98,6 +98,9 @@ import numpy as np
 from repro.core import griffin as griffin_lib
 from repro.models import decoder
 from repro.models.layers.attention import resolve_attn_backend
+from repro.obs.flocking import FlockingMonitor
+from repro.obs.stragglers import StepTimeMonitor
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving import sampling
 from repro.serving.metrics import ServingMetrics
 from repro.serving.paged import PagedConfig
@@ -127,6 +130,8 @@ class PagedServer:
         metrics: Optional[ServingMetrics] = None,
         mesh=None,
         tp_axis: str = "model",
+        tracer: Optional[Tracer] = None,
+        flocking_every: int = 0,
     ):
         assert decoder.supports_paged(cfg), (
             f"{cfg.name}: paged serving covers attention families only"
@@ -177,6 +182,24 @@ class PagedServer:
         self.pruned_slots: Optional[Dict] = None  # per-slot compacted FF
         self._next_rid = 0
         self._tick_attn_bytes = 0.0  # modeled KV read bytes, this tick
+        # observability (DESIGN.md section 12): the tracer's hooks are
+        # no-ops when disabled (NULL_TRACER); the request lifecycle is
+        # emitted by ServingMetrics with the clock reads it records, so
+        # traces reconcile exactly with summary()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.sched.metrics.tracer = self.tracer
+        self.steps_mon = StepTimeMonitor(self.sched.metrics.registry)
+        if flocking_every and self.gcfg is None:
+            raise ValueError(
+                "flocking_every needs gcfg: the telemetry compares the "
+                "GRIFFIN expert selection against decode activations"
+            )
+        self.flocking_every = flocking_every
+        self.flocking = FlockingMonitor(self.gcfg,
+                                        self.sched.metrics.registry) \
+            if flocking_every else None
+        self._tick_no = 0
+        self._probe = None
         backend = self.backend
 
         if self.tp is not None:
@@ -204,6 +227,8 @@ class PagedServer:
             self._decode = decode_tp
             self._verify = tp.verify(pool_specs)
             self._cow_copy = tp.cow(pool_specs)
+            if flocking_every:
+                self._probe = tp.probe(pool_specs)
             return
 
         # pools are donated through every step (argnums=1): XLA updates
@@ -243,6 +268,20 @@ class PagedServer:
         # than materializing a full copy of every pool per COW tick
         self._cow_copy = jax.jit(cow_copy, donate_argnums=(0,))
 
+        if flocking_every:
+
+            def probe(params, pools, bts, toks, pos, mask):
+                _, _, stats = decoder.decode_step_paged(
+                    params, cfg, pools, bts, toks, pos, write_mask=mask,
+                    pruned=None, collect_stats=True, backend=backend,
+                )
+                return stats
+
+            # NOT donated: the probe's returned pools (and KV writes)
+            # are discarded, so ``self.pools`` stays exactly the state
+            # the next real decode step expects
+            self._probe = jax.jit(probe)
+
     # -- API ---------------------------------------------------------------
     @property
     def metrics(self) -> ServingMetrics:
@@ -258,36 +297,92 @@ class PagedServer:
 
     def step(self) -> bool:
         """One scheduler tick; returns True while work remains."""
-        plan = self.sched.plan_step()
-        if plan.cow:
-            # copy-on-write forks: duplicate shared page bits into the
-            # writers' fresh pages before any of this tick's writes
-            self.pools = self._cow_copy(
-                self.pools,
-                jnp.asarray([s for s, _ in plan.cow], jnp.int32),
-                jnp.asarray([d for _, d in plan.cow], jnp.int32),
-            )
-        if plan.prefill is not None:
-            self._run_prefill(plan.prefill)
-        if plan.decode:
-            ks = self._plan_spec(plan.decode) if self.spec_k else None
-            if ks:
-                self._run_speculative(plan.decode, ks)
-            else:
-                self._run_decode(plan.decode)
-        self.sched.metrics.on_step(self.sched.pool_in_use_frac(),
-                                   len(plan.decode),
-                                   shared_pages=self.sched.alloc.num_shared,
-                                   attn_bytes_read=self._tick_attn_bytes)
+        tr = self.tracer
+        metrics = self.sched.metrics
+        t0 = metrics.clock()
+        self._tick_no += 1
+        with tr.span("tick", tick=self._tick_no):
+            # host-side planning (no device work) — its own span so a
+            # trace separates scheduling cost from device dispatch
+            with tr.span("plan"):
+                plan = self.sched.plan_step()
+            if plan.cow:
+                # copy-on-write forks: duplicate shared page bits into
+                # the writers' fresh pages before any of this tick's
+                # writes
+                with tr.span("cow_copy", pairs=len(plan.cow)):
+                    self.pools = self._cow_copy(
+                        self.pools,
+                        jnp.asarray([s for s, _ in plan.cow], jnp.int32),
+                        jnp.asarray([d for _, d in plan.cow], jnp.int32),
+                    )
+            if plan.prefill is not None:
+                with tr.span("prefill_chunk", rid=plan.prefill.req.rid,
+                             start=plan.prefill.start,
+                             tokens=len(plan.prefill.tokens)):
+                    self._run_prefill(plan.prefill)
+            if plan.decode:
+                if self.flocking is not None \
+                        and self._tick_no % self.flocking_every == 0:
+                    # dense probe *before* the decode/spec step donates
+                    # the pools; its writes are discarded
+                    with tr.span("flocking_probe", cat="obs",
+                                 batch=len(plan.decode)):
+                        self._run_flocking_probe(plan.decode)
+                ks = self._plan_spec(plan.decode) if self.spec_k else None
+                if ks:
+                    with tr.span("spec_round", batch=len(plan.decode),
+                                 drafted=sum(ks.values())):
+                        self._run_speculative(plan.decode, ks)
+                else:
+                    with tr.span("decode", batch=len(plan.decode)):
+                        self._run_decode(plan.decode)
+            metrics.on_step(self.sched.pool_in_use_frac(),
+                            len(plan.decode),
+                            shared_pages=self.sched.alloc.num_shared,
+                            attn_bytes_read=self._tick_attn_bytes)
         self._tick_attn_bytes = 0.0
+        if self.flocking is not None:
+            for rid in [r for r in self.flocking.live_rids()
+                        if r in self.sched.finished]:
+                self.flocking.on_finish(rid)
+        dur = metrics.clock() - t0
+        shard_times = None
+        if self.tp is not None:
+            shard_times = {i: dur for i in self.tp.shard_ids}
+        self.steps_mon.on_tick(dur, shard_times)
+        tr.counter("pool", occupancy=self.sched.pool_in_use_frac(),
+                   decode_batch=len(plan.decode),
+                   shared_pages=self.sched.alloc.num_shared)
         return self.sched.has_work
+
+    def cancel(self, rid: int) -> bool:
+        """Client-side abort (between ticks): drop the request wherever
+        it lives, free its pages, count it as a ``cancelled`` abort.
+        Returns False for unknown or already-finished rids."""
+        ok = self.sched.cancel(rid)
+        if ok and self.flocking is not None:
+            self.flocking.on_finish(rid)
+        return ok
 
     def drain(self) -> Dict[int, List[int]]:
         """Run until idle; returns generated tokens per finished request."""
         while self.step():
             pass
+        self.sync_prefix_gauges()
         return {rid: r.generated for rid, r in self.sched.finished.items()
                 if not r.aborted}
+
+    def sync_prefix_gauges(self) -> None:
+        """Mirror the prefix trie's shape (``PrefixCache.stats``) onto
+        registry gauges so metric snapshots carry cache state."""
+        if self.sched.prefix is None:
+            return
+        for k, v in self.sched.prefix.stats().items():
+            self.metrics.registry.gauge(
+                f"serving_prefix_{k}",
+                help="Prefix-trie shape gauge (see PrefixCache.stats)",
+            ).set(v)
 
     # -- live-context narrowing + modeled attention traffic ----------------
     def _live_width(self, reqs: List[ScheduledRequest]) -> int:
@@ -344,10 +439,11 @@ class PagedServer:
         # verifier, so the rebuild must stay dense too.
         use_pruned = work.use_pruned and not self.spec_k
         pruned = self._expand_b1(req.pruned_host) if use_pruned else None
-        logits, self.pools, stats = self._prefill(
-            self.params, self.pools, jnp.asarray(bt), jnp.asarray(toks),
-            jnp.asarray(pos), jnp.asarray(mask), pruned, collect,
-        )
+        with self.tracer.jax_annotation("prefill_chunk"):
+            logits, self.pools, stats = self._prefill(
+                self.params, self.pools, jnp.asarray(bt), jnp.asarray(toks),
+                jnp.asarray(pos), jnp.asarray(mask), pruned, collect,
+            )
         if collect:
             part = decoder.prune_stats_tree(stats, self.cfg)
             if self.tp is not None:
@@ -374,11 +470,20 @@ class PagedServer:
                 req.pruned_host = griffin_lib.compact_tree(
                     ffn_tree, sel, shards=self.gcfg.tp_shards
                 )
+                if self.flocking is not None:
+                    # frozen selection + the statistic it was made from,
+                    # captured before the accumulator is dropped
+                    self.flocking.on_select(
+                        req.rid, jax.tree.map(np.asarray, sel),
+                        jax.tree.map(np.asarray, req.s_sq_acc))
                 req.compacted = True
                 req.s_sq_acc = None
             self._install_pruned(req.slot, req.pruned_host)
 
-    def _run_decode(self, reqs: List[ScheduledRequest]) -> None:
+    def _decode_inputs(self, reqs: List[ScheduledRequest]):
+        """Padded one-token decode inputs for the batch: each request's
+        newest token at its ``cache_len`` position (the same arrays the
+        flocking probe replays through the dense model)."""
         B, W = self.n_slots, self._live_width(reqs)
         toks = np.zeros((B, 1), np.int32)
         pos = np.zeros((B,), np.int32)
@@ -390,19 +495,50 @@ class PagedServer:
             pos[s] = req.cache_len
             mask[s, 0] = True
             bts[s] = req.table.as_array(W)
+        return toks, pos, mask, bts, W
+
+    def _run_decode(self, reqs: List[ScheduledRequest]) -> None:
+        B = self.n_slots
+        toks, pos, mask, bts, W = self._decode_inputs(reqs)
         self._count_attn_bytes([r.cache_len for r in reqs], 1, W, rows=B)
         # spec mode: the compacted weights are only the *draft* — a
         # vanilla tick (pool-pressure fallback) must decode dense, or its
         # tokens and KV diverge from the dense stream the verifier commits
         pruned = self.pruned_slots \
             if (self.gcfg is not None and not self.spec_k) else None
-        logits, self.pools = self._decode(
-            self.params, self.pools, jnp.asarray(bts), jnp.asarray(toks),
-            jnp.asarray(pos), jnp.asarray(mask), pruned,
-        )
+        with self.tracer.jax_annotation("decode_step"):
+            logits, self.pools = self._decode(
+                self.params, self.pools, jnp.asarray(bts), jnp.asarray(toks),
+                jnp.asarray(pos), jnp.asarray(mask), pruned,
+            )
         logits = np.asarray(logits)  # [slots, 1, V]
         for req in reqs:
             self.sched.finish_decode_token(req, int(np.argmax(logits[req.slot, 0])))
+
+    # -- flocking telemetry (obs/flocking.py) ------------------------------
+    def _run_flocking_probe(self, reqs: List[ScheduledRequest]) -> None:
+        """Dense stats probe over the live decode batch: one un-pruned
+        ``decode_step_paged`` with ``collect_stats`` on the *same*
+        inputs the coming decode tick uses.  The jit does not donate the
+        pools and its outputs (logits, written KV) are discarded, so
+        serving state and tokens are untouched — only the per-slot
+        ``s_sq`` rows feed the monitor."""
+        probed = [r for r in reqs if r.compacted and r.generated]
+        if not probed or self._probe is None:
+            return
+        toks, pos, mask, bts, _ = self._decode_inputs(probed)
+        with self.tracer.jax_annotation("flocking_probe"):
+            stats = self._probe(
+                self.params, self.pools, jnp.asarray(bts),
+                jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(mask),
+            )
+        part = decoder.prune_stats_tree(stats, self.cfg)
+        part = jax.tree.map(np.asarray, part)
+        results = self.flocking.on_probe(
+            {r.rid: r.slot for r in probed}, part)
+        for rid, v in results.items():
+            self.tracer.ainstant(rid, "flocking", jaccard=v["jaccard"],
+                                 angular=v["angular"])
 
     # -- speculative draft / verify / commit / rollback --------------------
     def _plan_spec(self, reqs: List[ScheduledRequest]) -> Optional[Dict[int, int]]:
@@ -490,28 +626,34 @@ class PagedServer:
         self._count_attn_bytes(
             [base[r.rid] + ks[r.rid] for r in reqs], 1, W, rows=B
         )
-        vlogits, self.pools = self._verify(
-            self.params, self.pools, bts_j, jnp.asarray(vtoks),
-            jnp.asarray(vpos), jnp.asarray(vmask),
-        )
+        with self.tracer.jax_annotation("verify_step"):
+            vlogits, self.pools = self._verify(
+                self.params, self.pools, bts_j, jnp.asarray(vtoks),
+                jnp.asarray(vpos), jnp.asarray(vmask),
+            )
         vlogits = np.asarray(vlogits)  # [slots, K+1, V]
 
-        # commit accepted tokens through the vanilla callbacks
+        # commit accepted tokens through the vanilla callbacks.  The
+        # round telemetry fires *before* the commits: the last commit
+        # can finish the request (closing its trace span), and a
+        # spec_round instant after the span end would be outside the
+        # request's async window.  ``done`` is purely a generated-count
+        # check, so the commit count is known up front.
         for req in reqs:
             kr = ks[req.rid]
             committed, n_acc = sampling.greedy_verify(
                 vlogits[req.slot, : kr + 1], draft[req.rid]
             )
-            n_commit = 0
-            for tok in committed:
-                if req.done:
-                    break
-                self.sched.finish_decode_token(req, tok)
-                n_commit += 1
+            n_commit = min(len(committed),
+                           req.max_new - len(req.generated))
             if kr:
                 self.sched.metrics.on_spec_round(
                     req.rid, drafted=kr, accepted=n_acc, committed=n_commit
                 )
+            for tok in committed:
+                if req.done:
+                    break
+                self.sched.finish_decode_token(req, tok)
         # return unused draft tails in reverse reservation order, so
         # the rollbacks unwind the allocator's LIFO stack exactly (see
         # BlockAllocator.free_pages for the bit-identity scope)
