@@ -846,6 +846,149 @@ def bench_obs(smoke: bool = False) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Serving-SLO: goodput/TTFT/shed under calibrated 1x and 2x overload
+# ---------------------------------------------------------------------------
+
+def bench_serving_slo(smoke: bool = False) -> None:
+    """Async frontend under closed-loop chat load at 1x and 2x the
+    calibrated capacity (serving/frontend.py + serving/loadgen.py).
+
+    Three stages:
+
+    1. **calibrate** — drain a batch synchronously to measure this
+       host's service rate (requests/s) and baseline TTFT; the load
+       points and the per-class TTFT deadlines are derived from these,
+       so the benchmark measures the *policy* (admission, EDF, shed)
+       rather than the host's absolute speed.
+    2. **load** — run the Zipf x Poisson x long-tail multi-turn trace
+       through the frontend at 1x and 2x calibrated capacity on the
+       real clock.  Reported per point: goodput under SLO (tokens from
+       SLO-met completions per second), TTFT p50/p99, shed+reject rate,
+       SLO-met rate.
+    3. **oracle** — every finished turn's (prompt, max_new) replays
+       through a fresh synchronous ``PagedServer`` drain; streamed
+       tokens must match token-for-token (``token_identical``).
+
+    Correctness (token identity) is asserted always; load-shape
+    indicators (shed monotonicity, goodput saturation ratio) are
+    recorded but never asserted — the closed loop self-throttles (a
+    shed turn ends its session), so those wobble at bench trace sizes
+    without any code defect.
+    """
+    from repro.serving.frontend import ServingFrontend
+    from repro.serving.loadgen import chat_sessions, run_closed_loop
+    from repro.serving.server import PagedServer
+
+    cfg, params = trained_tiny(steps=120 if smoke else 500)
+    gcfg = GriffinConfig(sparsity=0.5, per_shard_topk=False)
+
+    def make_server(tracer=None):
+        return PagedServer(cfg, params, gcfg=gcfg, page_size=16,
+                           num_pages=128, n_slots=4, prefill_chunk=32,
+                           max_len=192, prefix_cache=True, tracer=tracer)
+
+    # -- 1. calibrate service capacity -------------------------------------
+    # warmup drain first (jit compile), then an unloaded pair for the
+    # queue-free TTFT baseline, then a saturated batch for requests/s —
+    # conflating those would fold compile + queue wait into the
+    # deadlines and no load point would ever shed
+    rng = np.random.default_rng(3)
+    calib = make_server()
+    for i in range(2):
+        calib.submit(rng.integers(0, cfg.vocab_size, size=40), max_new=4,
+                     rid=9000 + i)
+    calib.drain()
+    for i in range(2):
+        calib.submit(rng.integers(0, cfg.vocab_size, size=40), max_new=10,
+                     rid=9100 + i)
+    calib.drain()
+    unloaded = [r.ttft for r in calib.metrics.requests.values()
+                if r.rid >= 9100 and r.ttft is not None]
+    ttft_base = max(float(np.median(unloaded)), 1e-3)
+    n_cal = 6 if smoke else 12
+    for i in range(n_cal):
+        calib.submit(rng.integers(0, cfg.vocab_size, size=40), max_new=10,
+                     rid=i)
+    t0 = time.perf_counter()
+    calib.drain()
+    cal_wall = time.perf_counter() - t0
+    capacity_rps = n_cal / cal_wall
+    # deadlines with real headroom over the unloaded baseline (floors
+    # absorb scheduler-noise blips on shared runners): interactive
+    # sheds under sustained overload, standard rarely does
+    deadlines = {"interactive": max(8.0 * ttft_base, 0.25),
+                 "standard": max(24.0 * ttft_base, 0.75),
+                 "batch": None}
+    emit("serving_slo_calibration", cal_wall * 1e6,
+         f"capacity={capacity_rps:.2f}req/s ttft_base={ttft_base:.3f}s")
+
+    # -- 2. closed-loop load at 1x and 2x ----------------------------------
+    n_sessions = 8 if smoke else 20
+    mean_turns = 2.0  # E[uniform{1..3}]
+    points, streams = {}, {}
+    for label, factor in (("1x", 1.0), ("2x", 2.0)):
+        tracer = bench_tracer()
+        srv = make_server(tracer)
+        # jit-warm this instance before the measured window, or the
+        # first arrivals eat the compile stall and shed spuriously
+        srv.submit(rng.integers(0, cfg.vocab_size, size=40), max_new=4,
+                   rid=9500)
+        srv.drain()
+        fe = ServingFrontend(srv, max_pending=32, queue_depth=8)
+        sessions = chat_sessions(
+            n_sessions, rate=capacity_rps * factor / mean_turns,
+            seed=29, vocab=cfg.vocab_size, n_system=3, system_len=48,
+            max_turns=3, gen_median=6.0, gen_cap=16,
+            think_mean_s=0.5 / capacity_rps, deadlines=deadlines)
+        res = run_closed_loop(fe, sessions, clock=fe.clock)
+        s = res.summary()
+        s["frontend"] = fe.summary()
+        s["engine_sheds"] = srv.metrics.shed_aborts
+        s["cancel_latency_p95_s"] = \
+            srv.metrics.summary()["cancel_latency_p95_s"]
+        points[label] = s
+        for key, toks in res.identity_pairs().items():
+            if key in streams:
+                assert streams[key] == toks, "cross-point stream mismatch"
+            streams[key] = toks
+        emit(f"serving_slo_{label}", s["wall_s"] * 1e6,
+             f"goodput={s['goodput_tokens_per_sec']:.1f}tok/s "
+             f"ttft_p99={s['ttft_p99_s']:.3f}s "
+             f"shed_rate={s['shed_rate']:.2f} "
+             f"slo_met={s['slo_met_rate']:.2f}")
+        save_trace(f"serving_slo_{label}", tracer)
+
+    # -- 3. streamed-vs-drained oracle -------------------------------------
+    oracle = make_server()
+    keys = list(streams)
+    for i, (prompt, max_new) in enumerate(keys):
+        oracle.submit(np.asarray(prompt, np.int32), max_new=max_new, rid=i)
+    outs = oracle.drain()
+    identical = all(tuple(outs[i]) == streams[keys[i]]
+                    for i in range(len(keys)))
+    emit("serving_slo_identity", 0.0,
+         f"streams={len(keys)} token_identical={identical}")
+
+    record("smoke", bool(smoke))
+    record("capacity_rps", capacity_rps)
+    record("ttft_base_s", ttft_base)
+    record("deadlines_s", {k: v for k, v in deadlines.items()})
+    record("points", points)
+    record("streams_checked", len(keys))
+    record("token_identical", bool(identical))
+    # load-shape indicators are recorded, never asserted: the closed
+    # loop self-throttles (a shed turn ends its session), so per-run
+    # shed rates wobble at these trace sizes without any code defect
+    record("shed_rate_monotone",
+           bool(points["2x"]["shed_rate"] >= points["1x"]["shed_rate"]))
+    g1 = points["1x"]["goodput_tokens_per_sec"]
+    g2 = points["2x"]["goodput_tokens_per_sec"]
+    record("goodput_2x_over_1x", g2 / g1 if g1 > 0 else 0.0)
+    assert identical, "streamed tokens diverged from the drain oracle"
+    assert keys, "no finished streams to verify"
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from dry-run artifacts
 # ---------------------------------------------------------------------------
 
@@ -887,6 +1030,7 @@ BENCHES = {
     "prefix": bench_prefix,
     "sharded": bench_sharded,
     "obs": bench_obs,
+    "serving_slo": bench_serving_slo,
     "roofline": bench_roofline_table,
 }
 

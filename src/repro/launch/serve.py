@@ -36,6 +36,7 @@ from repro.launch.mesh import make_serving_mesh
 from repro.models import decoder
 from repro.serving.engine import ContinuousBatcher
 from repro.serving.server import PagedServer
+from repro.serving.slo import SLO_CLASSES
 
 
 def parse_mesh(spec: str):
@@ -102,6 +103,17 @@ def main() -> None:
                     help="capture a jax.profiler device trace of the "
                          "drain into DIR (with --trace-out, jitted steps "
                          "also get TraceAnnotation markers)")
+    ap.add_argument("--http", default=None, metavar="HOST:PORT",
+                    help="serve over HTTP instead of draining synthetic "
+                         "requests: POST /v1/generate streams tokens as "
+                         "SSE, GET /metrics is Prometheus, GET /healthz "
+                         "is liveness (continuous batching + SLO-aware "
+                         "admission; see serving/frontend.py)")
+    ap.add_argument("--slo-class", default="standard",
+                    choices=sorted(SLO_CLASSES),
+                    help="default SLO class for requests that do not "
+                         "name one (priority + TTFT deadline; expired "
+                         "requests that produced nothing are shed)")
     args = ap.parse_args()
 
     if args.arch in ("tinylm", "tinylm-tp"):
@@ -144,6 +156,15 @@ def main() -> None:
     if any(obs_flags) and not decoder.supports_paged(cfg):
         ap.error(f"observability flags need the paged serving path; "
                  f"{cfg.name} falls back to the slot batcher")
+    if args.http is not None:
+        if not decoder.supports_paged(cfg):
+            ap.error(f"--http requires the paged serving path; "
+                     f"{cfg.name} falls back to the slot batcher")
+        try:
+            http_host, http_port = args.http.rsplit(":", 1)
+            http_port = int(http_port)
+        except ValueError:
+            ap.error(f"--http wants HOST:PORT, got {args.http!r}")
     if args.flocking_telemetry and gcfg is None:
         ap.error("--flocking-telemetry requires GRIFFIN "
                  "(drop --no-griffin)")
@@ -171,6 +192,31 @@ def main() -> None:
             tp_axis=args.mesh[0] if args.mesh else "model",
             tracer=tracer, flocking_every=args.flocking_telemetry,
         )
+        if args.http is not None:
+            import asyncio
+
+            from repro.serving.frontend import ServingFrontend
+
+            fe = ServingFrontend(srv, default_slo=args.slo_class)
+            print(f"[{mode}] http: serving on {http_host}:{http_port} "
+                  f"(default SLO class: {args.slo_class})")
+            print(f"  POST http://{http_host}:{http_port}/v1/generate  "
+                  f'{{"prompt": [1,2,3], "max_new": 16, '
+                  f'"slo": "interactive"}}  -> SSE token stream')
+            print(f"  GET  http://{http_host}:{http_port}/metrics   "
+                  f"(Prometheus)   /healthz (liveness)")
+            try:
+                asyncio.run(fe.serve_http(http_host, http_port))
+            except KeyboardInterrupt:
+                pass
+            m = srv.metrics.summary()
+            s = fe.summary()
+            print(f"[{mode}] http: accepted={s['accepted']:.0f} "
+                  f"completed={s['completed']:.0f} shed={s['shed']:.0f} "
+                  f"slo_met_rate={s['slo_met_rate']:.2f} "
+                  f"ttft_p99={s['ttft_p99_s']:.3f}s "
+                  f"steps={m['steps']:.0f}")
+            return
         for rid, (prompt, gen) in enumerate(reqs):
             srv.submit(prompt, max_new=gen, rid=rid)
         if args.jax_profile:

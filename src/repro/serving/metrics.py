@@ -39,8 +39,16 @@ list-based view; only quantiles are bucket-interpolated.  A ``tracer``
 the request lifecycle as async spans — emitted *here*, with the same
 clock reads the timelines record, so a trace reconciles exactly with
 ``summary()``.  ``prometheus_text()`` / ``snapshot()`` export the
-registry; abort accounting distinguishes pool-exhaustion (``oom``)
-from client ``cancelled`` aborts.
+registry; abort accounting distinguishes pool-exhaustion (``oom``),
+client ``cancelled`` aborts, and frontend ``shed`` decisions.
+
+Cancellation latency (DESIGN.md section 13): the frontend stamps the
+client-disconnect instant via ``on_disconnect``; the abort itself only
+lands at the next tick boundary when the scheduler frees the pages and
+calls ``on_finish``.  The gap — disconnect to pages-freed — is the
+``serving_cancel_latency_s`` histogram, and both ends are emitted to
+the tracer (``disconnect`` instant, span-end ``cancel_latency_s`` arg)
+with the same clock reads, so trace and histogram reconcile exactly.
 """
 from __future__ import annotations
 
@@ -64,12 +72,16 @@ class RequestTimeline:
     prefill_start_t: Optional[float] = None
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
+    # client disconnect observed by the frontend; the abort lands later,
+    # when the scheduler actually frees the pages — the gap is the
+    # cancellation latency the frontend is on the hook for
+    disconnect_t: Optional[float] = None
     prompt_tokens: int = 0
     generated_tokens: int = 0
     prefill_chunks: int = 0
     preemptions: int = 0
     aborted: bool = False
-    abort_reason: Optional[str] = None  # "oom" | "cancelled" when aborted
+    abort_reason: Optional[str] = None  # "oom"|"cancelled"|"shed" when aborted
     draft_tokens: int = 0
     accepted_draft_tokens: int = 0
     spec_rounds: int = 0
@@ -88,6 +100,13 @@ class RequestTimeline:
         if self.first_token_t is None:
             return None
         return self.first_token_t - self.submit_t
+
+    @property
+    def cancel_latency(self) -> Optional[float]:
+        """Disconnect -> pages freed (None unless both ends happened)."""
+        if self.disconnect_t is None or self.finish_t is None:
+            return None
+        return self.finish_t - self.disconnect_t
 
     @property
     def tpot(self) -> Optional[float]:
@@ -112,6 +131,9 @@ POOL_OCCUPANCY_BUCKETS = linear_buckets(0.05, 1.0, 20)
 DECODE_BATCH_BUCKETS = linear_buckets(0.0, 64.0, 65)
 SHARED_PAGES_BUCKETS = (0.0,) + exp_buckets(1.0, 2.0, 15)
 ATTN_BYTES_BUCKETS = (0.0,) + exp_buckets(4096.0, 2.0, 28)
+# disconnect -> pages-freed latency: 100us .. ~200s geometric, plus an
+# explicit 0 bucket (same-instant cancels on the fake clock)
+CANCEL_LATENCY_BUCKETS = (0.0,) + exp_buckets(1e-4, 2.0, 22)
 
 
 @dataclass
@@ -133,6 +155,7 @@ class ServingMetrics:
     preemptions: int = 0
     oom_aborts: int = 0
     cancelled_aborts: int = 0
+    shed_aborts: int = 0  # dropped by SLO admission before any token
     # speculative decoding (one round = k draft steps + 1 verify step)
     spec_rounds: int = 0
     draft_tokens: int = 0
@@ -166,6 +189,13 @@ class ServingMetrics:
         self.attn_bytes_read = self.registry.histogram(
             "serving_attn_bytes_read", buckets=ATTN_BYTES_BUCKETS,
             help="Modeled HBM bytes of paged KV read by attention per tick")
+        # disconnect -> pages-freed latency.  The old flow learned of an
+        # abort only when ``on_finish`` fired at drain/cancel time, so
+        # the disconnect instant was invisible: ``on_disconnect`` stamps
+        # it and this histogram closes the loop when the pages come back
+        self.cancel_latency = self.registry.histogram(
+            "serving_cancel_latency_s", buckets=CANCEL_LATENCY_BUCKETS,
+            help="Client disconnect -> pages freed, seconds")
 
     def _now(self, t: Optional[float] = None) -> float:
         """Read the clock (or take a pre-read value) and extend the
@@ -211,11 +241,24 @@ class ServingMetrics:
         self._now()
         self.requests[rid].generated_tokens += 1
 
+    def on_disconnect(self, rid: int) -> None:
+        """Client went away (stream closed / deadline shed decision).
+        Stamps the disconnect instant; the abort itself lands later via
+        ``on_finish`` when the scheduler frees the pages, and the gap
+        between the two reads is the ``cancel_latency`` observation."""
+        r = self.requests.get(rid)
+        if r is None or r.disconnect_t is not None:
+            return
+        t = self._now()
+        r.disconnect_t = t
+        self.tracer.ainstant(rid, "disconnect", ts=t)
+
     def on_finish(self, rid: int, aborted: bool = False,
                   reason: str = "oom") -> None:
         """Finish a request.  ``reason`` applies only when ``aborted``:
-        ``"oom"`` (pool exhaustion — the scheduler's only abort) or
-        ``"cancelled"`` (client-side, ``PagedServer.cancel``)."""
+        ``"oom"`` (pool exhaustion — the scheduler's only abort),
+        ``"cancelled"`` (client-side, ``PagedServer.cancel``), or
+        ``"shed"`` (frontend admission control)."""
         r = self.requests[rid]
         t = self._now()
         r.finish_t = t
@@ -224,8 +267,12 @@ class ServingMetrics:
             r.abort_reason = reason
             if reason == "oom":
                 self.oom_aborts += 1
+            elif reason == "shed":
+                self.shed_aborts += 1
             else:
                 self.cancelled_aborts += 1
+            if r.disconnect_t is not None:
+                self.cancel_latency.observe(max(0.0, t - r.disconnect_t))
         # end the request span with the timeline's own aggregates so a
         # trace reconciles with summary() exactly, not just closely
         self.tracer.aend(
@@ -234,7 +281,8 @@ class ServingMetrics:
             ttft_s=r.ttft, preemptions=r.preemptions,
             spec_rounds=r.spec_rounds, prefill_chunks=r.prefill_chunks,
             cow_copies=r.cow_copies, aborted=aborted,
-            reason=r.abort_reason)
+            reason=r.abort_reason,
+            cancel_latency_s=r.cancel_latency)
 
     def on_spec_round(self, rid: int, drafted: int, accepted: int,
                       committed: int) -> None:
@@ -324,9 +372,13 @@ class ServingMetrics:
             wall = self.last_event_t - self.first_submit_t
         return {
             "requests_finished": float(len(done)),
-            "requests_aborted": float(self.oom_aborts + self.cancelled_aborts),
+            "requests_aborted": float(
+                self.oom_aborts + self.cancelled_aborts + self.shed_aborts),
             "requests_aborted_oom": float(self.oom_aborts),
             "requests_aborted_cancelled": float(self.cancelled_aborts),
+            "requests_aborted_shed": float(self.shed_aborts),
+            "cancel_latency_mean_s": self.cancel_latency.mean,
+            "cancel_latency_p95_s": self.cancel_latency.quantile(0.95),
             "generated_tokens": float(total_tokens),
             "aborted_generated_tokens": float(aborted_tokens),
             "wall_s": float(wall),
@@ -365,7 +417,8 @@ class ServingMetrics:
     # summary() keys that are monotone counts; the rest export as gauges
     _COUNTER_KEYS = frozenset({
         "requests_finished", "requests_aborted", "requests_aborted_oom",
-        "requests_aborted_cancelled", "generated_tokens",
+        "requests_aborted_cancelled", "requests_aborted_shed",
+        "generated_tokens",
         "aborted_generated_tokens", "preemptions", "prefill_chunks",
         "steps", "spec_rounds", "draft_tokens", "saved_prefill_tokens",
         "prefix_inserts", "prefix_evictions", "prefix_evicted_refs",

@@ -74,6 +74,10 @@ class ScheduledRequest:
     max_new: int
     priority: int = 0  # higher = served first
     seq: int = 0  # arrival order (FCFS tiebreak)
+    # absolute TTFT deadline on the metrics clock (None = no deadline);
+    # orders dispatch *within* a priority class and lets the frontend
+    # shed requests that expired before producing a token
+    deadline: Optional[float] = None
     state: str = QUEUED
     generated: List[int] = field(default_factory=list)
     prefilled: int = 0  # tokens of prefill_tokens already in pages
@@ -161,7 +165,8 @@ class Scheduler:
 
     # -- submission --------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int, rid: int,
-               priority: int = 0) -> ScheduledRequest:
+               priority: int = 0,
+               deadline: Optional[float] = None) -> ScheduledRequest:
         live = list(self.queue) + list(self.decoding)
         if self.prefilling is not None:
             live.append(self.prefilling)
@@ -182,14 +187,23 @@ class Scheduler:
                 f"{self.pcfg.max_request_len}"
             )
         req = ScheduledRequest(rid, prompt, max_new, priority=priority,
-                               seq=next(self._seq))
+                               seq=next(self._seq), deadline=deadline)
         self.queue.append(req)
         self.metrics.on_submit(rid, len(prompt), priority)
         return req
 
     # -- internals ---------------------------------------------------------
     def _queue_order(self) -> List[ScheduledRequest]:
-        return sorted(self.queue, key=lambda r: (-r.priority, r.seq))
+        # priority class first, earliest deadline within a class (EDF),
+        # arrival order as the final tiebreak — which also keeps plain
+        # FCFS exactly as before when nobody carries a deadline
+        inf = float("inf")
+        return sorted(
+            self.queue,
+            key=lambda r: (-r.priority,
+                           r.deadline if r.deadline is not None else inf,
+                           r.seq),
+        )
 
     def _preempt_one(self, needy: ScheduledRequest) -> bool:
         """Evict the lowest-priority latest-arrival decoding request —
@@ -322,28 +336,46 @@ class Scheduler:
         self.finished[req.rid] = req
         self.metrics.on_finish(req.rid, aborted=True, reason=reason)
 
-    def cancel(self, rid: int) -> bool:
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
         """Client-side abort: drop the request wherever it lives and
         free its pages.  Returns False for unknown/finished rids.  Call
         between ``plan_step`` executions only — the server's ``cancel``
         wrapper guarantees that; cancelling a request the in-flight plan
-        still references would free pages the step is about to write."""
+        still references would free pages the step is about to write.
+
+        ``reason`` feeds the metrics abort split: "cancelled" for client
+        disconnects, "shed" when the frontend drops an expired request
+        at the admission boundary (same page-freeing path, different
+        accounting)."""
         for req in self.queue:
             if req.rid == rid:
                 self.queue.remove(req)
-                self._abort(req, reason="cancelled")
+                self._abort(req, reason=reason)
                 return True
         if self.prefilling is not None and self.prefilling.rid == rid:
             req = self.prefilling
             self.prefilling = None
-            self._abort(req, reason="cancelled")
+            self._abort(req, reason=reason)
             return True
         for req in self.decoding:
             if req.rid == rid:
                 self.decoding.remove(req)
-                self._abort(req, reason="cancelled")
+                self._abort(req, reason=reason)
                 return True
         return False
+
+    def lookup(self, rid: int) -> Optional[ScheduledRequest]:
+        """Find a request in any state (None for unknown rids) — the
+        frontend pumps streamed tokens straight off the live object."""
+        req = self.finished.get(rid)
+        if req is not None:
+            return req
+        if self.prefilling is not None and self.prefilling.rid == rid:
+            return self.prefilling
+        for req in itertools.chain(self.queue, self.decoding):
+            if req.rid == rid:
+                return req
+        return None
 
     # -- planning ----------------------------------------------------------
     def plan_step(self) -> StepPlan:

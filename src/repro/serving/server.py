@@ -288,11 +288,12 @@ class PagedServer:
         return self.sched.metrics
 
     def submit(self, prompt: np.ndarray, max_new: int,
-               rid: Optional[int] = None, priority: int = 0) -> int:
+               rid: Optional[int] = None, priority: int = 0,
+               deadline: Optional[float] = None) -> int:
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid + 1)
-        self.sched.submit(prompt, max_new, rid, priority)
+        self.sched.submit(prompt, max_new, rid, priority, deadline=deadline)
         return rid
 
     def step(self) -> bool:
@@ -356,11 +357,12 @@ class PagedServer:
                    shared_pages=self.sched.alloc.num_shared)
         return self.sched.has_work
 
-    def cancel(self, rid: int) -> bool:
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
         """Client-side abort (between ticks): drop the request wherever
-        it lives, free its pages, count it as a ``cancelled`` abort.
-        Returns False for unknown or already-finished rids."""
-        ok = self.sched.cancel(rid)
+        it lives, free its pages, count it as a ``cancelled`` (or
+        ``shed``) abort.  Returns False for unknown or already-finished
+        rids."""
+        ok = self.sched.cancel(rid, reason=reason)
         if ok and self.flocking is not None:
             self.flocking.on_finish(rid)
         return ok

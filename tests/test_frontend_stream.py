@@ -1,0 +1,342 @@
+"""Streamed-vs-drained identity: the async edge must not change tokens.
+
+The frontend adds streaming, continuous batching, and an HTTP/SSE
+surface around ``PagedServer`` — none of which may perturb *what* is
+generated.  These tests pin that down three ways:
+
+* **handle streams == sync drain** — tokens consumed through the
+  ``StreamHandle`` async iterator, with requests arriving mid-run
+  (continuous batching) and the pool sized so preemption fires, are
+  token-identical to a plain synchronous ``submit/step/drain`` of the
+  same trace;
+* **prefix warm starts** — the same identity with the radix prefix
+  cache on and a second wave of requests re-using a finished wave's
+  system prefix (``prefix_hits > 0`` is asserted, so the cache provably
+  engaged);
+* **SSE framing == handle stream** — ``handle_connection`` driven over
+  in-memory ``StreamReader``/fake-writer pipes produces exactly one
+  ``data:`` frame per token, in order, equal to the deterministic
+  engine stream; EOF on the read side mid-stream cancels the request
+  and frees its pages.
+
+All async driving happens inside ``asyncio.run`` on a ``FakeClock`` —
+no pytest-asyncio dependency, zero wall-clock sleeps.
+"""
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import GriffinConfig
+from repro.models import decoder
+from repro.serving.clock import FakeClock
+from repro.serving.frontend import (ACTIVE, CANCELLED, FINISHED,
+                                    ServingFrontend)
+from repro.serving.metrics import ServingMetrics
+from repro.serving.server import PagedServer
+from repro.serving.sim import SimServer, sim_token
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinylm")
+    params = decoder.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _server(cfg, params, *, prefix: bool, clock, num_pages=40):
+    return PagedServer(
+        cfg, params, gcfg=GriffinConfig(sparsity=0.5, per_shard_topk=False),
+        page_size=8, num_pages=num_pages, n_slots=2, prefill_chunk=8,
+        max_len=64, spec_k=0, prefix_cache=prefix,
+        metrics=ServingMetrics(clock=clock))
+
+
+def _mk_trace(shared_prefix: bool, cfg):
+    rng = np.random.default_rng(7)
+    sys_p = rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+    out = []
+    for i in range(5):
+        tail = rng.integers(0, cfg.vocab_size,
+                            size=int(rng.integers(4, 10))).astype(np.int32)
+        if shared_prefix:
+            out.append(np.concatenate([sys_p, tail]))
+        else:
+            out.append(rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(12, 24))
+                                    ).astype(np.int32))
+    return list(zip(out, [8, 6, 10, 7, 9]))
+
+
+def _oracle(cfg, params, trace, *, prefix, num_pages=40):
+    srv = _server(cfg, params, prefix=prefix, clock=FakeClock(),
+                  num_pages=num_pages)
+    for i, (p, m) in enumerate(trace):
+        srv.submit(p, m, rid=i)
+    out = srv.drain()
+    return {i: tuple(out[i]) for i in out}
+
+
+async def _stream_all(fe, clk, handles, *, late=(), max_ticks=2000):
+    """Consume every handle through its async iterator while ticking the
+    frontend by hand; ``late`` is [(tick, prompt, max_new)] submissions
+    that arrive mid-run (continuous batching joins them to the running
+    batch)."""
+    outs = {}
+    tasks = {}
+
+    def track(h):
+        async def consume():
+            got = []
+            async for t in h:
+                got.append(t)
+            return got
+        outs[h.rid] = h
+        tasks[h.rid] = asyncio.ensure_future(consume())
+
+    for h in handles:
+        track(h)
+    late = list(late)
+    tick = 0
+    while (not all(t.done() for t in tasks.values())) or late or fe.has_work:
+        while late and late[0][0] <= tick:
+            _, p, m, rid_expect = late.pop(0)
+            h = fe.submit(p, m, slo="batch")
+            assert h.rid == rid_expect
+            track(h)
+        fe.tick()
+        clk.advance(0.001)
+        await asyncio.sleep(0)
+        tick += 1
+        assert tick < max_ticks
+    return {rid: tasks[rid].result() for rid in tasks}, outs
+
+
+def test_streamed_tokens_match_drained_with_preemption(tiny):
+    cfg, params = tiny
+    trace = _mk_trace(False, cfg)
+    oracle = _oracle(cfg, params, trace, prefix=False, num_pages=5)
+    clk = FakeClock()
+    # 5 pages * 8 tokens: any single request fits (<=5 pages) but the
+    # first pair fills the pool during request 1's prefill, so request
+    # 0's decode growth must preempt — later-arrival victims only, so
+    # this is the earlier-grows-into-dry-pool case
+    srv = _server(cfg, params, prefix=False, clock=clk, num_pages=5)
+    fe = ServingFrontend(srv, queue_depth=4, clock=clk)
+
+    async def run():
+        first = [fe.submit(p, m, slo="batch") for p, m in trace[:2]]
+        assert first[0].rid == 0 and first[1].rid == 1
+        late = [(3 + 2 * j, p, m, 2 + j)
+                for j, (p, m) in enumerate(trace[2:])]
+        return await _stream_all(fe, clk, first, late=late)
+
+    streamed, handles = asyncio.run(run())
+    assert srv.metrics.preemptions > 0, "pool sizing no longer forces preemption"
+    for i in range(len(trace)):
+        assert handles[i].state == FINISHED
+        assert tuple(streamed[i]) == oracle[i], f"stream {i} diverged"
+        assert tuple(handles[i].tokens) == oracle[i]
+
+
+def test_streamed_tokens_match_drained_with_prefix_warm_start(tiny):
+    cfg, params = tiny
+    trace = _mk_trace(True, cfg)
+    oracle = _oracle(cfg, params, trace, prefix=True)
+    clk = FakeClock()
+    srv = _server(cfg, params, prefix=True, clock=clk)
+    fe = ServingFrontend(srv, queue_depth=4, clock=clk)
+
+    async def run():
+        # wave 1 populates the radix cache with the shared system prefix
+        wave1 = [fe.submit(p, m, slo="batch") for p, m in trace[:2]]
+        out1, h1 = await _stream_all(fe, clk, wave1)
+        # wave 2 re-uses it: warm starts against retained cache pages
+        wave2 = [fe.submit(p, m, slo="batch") for p, m in trace[2:]]
+        out2, h2 = await _stream_all(fe, clk, wave2)
+        out1.update(out2)
+        h1.update(h2)
+        return out1, h1
+
+    streamed, handles = asyncio.run(run())
+    assert srv.metrics.prefix_hits > 0, "warm starts never hit the cache"
+    for i in range(len(trace)):
+        assert handles[i].state == FINISHED
+        assert tuple(streamed[i]) == oracle[i], f"stream {i} diverged"
+
+
+# ---------------------------------------------------------------------------
+# SSE framing over in-memory pipes (SimServer: framing is engine-agnostic)
+# ---------------------------------------------------------------------------
+
+class _MemWriter:
+    """Capture-only StreamWriter stand-in for handler tests."""
+
+    def __init__(self):
+        self.buf = bytearray()
+        self.closed = False
+
+    def write(self, b: bytes) -> None:
+        self.buf.extend(b)
+
+    async def drain(self) -> None:
+        pass
+
+    def can_write_eof(self) -> bool:
+        return False
+
+    def close(self) -> None:
+        self.closed = True
+
+
+def _post(path: str, obj) -> bytes:
+    body = json.dumps(obj).encode()
+    return (f"POST {path} HTTP/1.1\r\nContent-Length: {len(body)}\r\n"
+            f"\r\n").encode() + body
+
+
+def _parse_sse(raw: bytes):
+    """-> (status_line, [(event_or_None, data_dict), ...])"""
+    head, _, body = raw.partition(b"\r\n\r\n")
+    status = head.split(b"\r\n")[0].decode()
+    frames = []
+    for chunk in body.decode().split("\n\n"):
+        if not chunk.strip():
+            continue
+        event, data = None, None
+        for line in chunk.splitlines():
+            if line.startswith("event: "):
+                event = line[len("event: "):]
+            elif line.startswith("data: "):
+                data = json.loads(line[len("data: "):])
+        frames.append((event, data))
+    return status, frames
+
+
+def _sim_frontend(**kw):
+    clk = FakeClock()
+    srv = SimServer(metrics=ServingMetrics(clock=clk), **kw)
+    fe = ServingFrontend(srv, clock=clk)
+    return fe, srv, clk
+
+
+async def _drive_handler(fe, clk, reader, writer, *, max_ticks=500,
+                         mid=None):
+    task = asyncio.ensure_future(fe.handle_connection(reader, writer))
+    tick = 0
+    while not task.done():
+        if mid is not None and tick == mid[0]:
+            mid[1]()
+        fe.tick()
+        clk.advance(0.001)
+        await asyncio.sleep(0)
+        tick += 1
+        assert tick < max_ticks
+    await task
+
+
+def test_sse_stream_equals_engine_stream():
+    fe, srv, clk = _sim_frontend()
+    max_new = 9
+    writer = _MemWriter()
+
+    async def run():
+        # StreamReader must be born inside the running loop (3.10)
+        reader = asyncio.StreamReader()
+        reader.feed_data(_post("/v1/generate",
+                               {"prompt": [1, 2, 3], "max_new": max_new,
+                                "slo": "interactive"}))
+        await _drive_handler(fe, clk, reader, writer)
+
+    asyncio.run(run())
+    status, frames = _parse_sse(bytes(writer.buf))
+    assert status == "HTTP/1.1 200 OK"
+    assert frames[0][0] == "accepted" and frames[0][1]["slo"] == "interactive"
+    rid = frames[0][1]["rid"]
+    tokens = [d["token"] for ev, d in frames[1:-1]]
+    # one frame per token, in order, equal to the deterministic engine
+    # stream — SSE adds framing, never reorders or drops
+    assert tokens == [sim_token(rid, p) for p in range(max_new)]
+    done_ev, done = frames[-1]
+    assert done_ev == "done"
+    assert done["reason"] == "complete" and done["tokens"] == max_new
+    assert done["slo_met"] is True
+    assert writer.closed
+
+
+def test_sse_disconnect_cancels_and_frees_pages():
+    fe, srv, clk = _sim_frontend(num_pages=16)
+    writer = _MemWriter()
+
+    async def run():
+        reader = asyncio.StreamReader()
+        reader.feed_data(_post("/v1/generate",
+                               {"prompt": list(range(8)), "max_new": 32}))
+        # EOF on the client pipe a few ticks in — mid-decode — cancels
+        await _drive_handler(fe, clk, reader, writer,
+                             mid=(4, reader.feed_eof))
+
+    asyncio.run(run())
+    h = fe.handles[0]
+    assert h.state in (ACTIVE, CANCELLED)  # cancel applies at next tick
+    fe.run_until_idle()
+    assert h.state == CANCELLED
+    assert 0 < len(h.tokens) < 32
+    srv.sched.alloc.check()
+    assert srv.sched.alloc.num_in_use == 0
+    assert srv.metrics.cancelled_aborts == 1
+    assert srv.metrics.cancel_latency.count == 1
+
+
+def test_http_surface_statuses():
+    fe, srv, clk = _sim_frontend()
+
+    async def roundtrip(raw: bytes) -> bytes:
+        reader = asyncio.StreamReader()
+        reader.feed_data(raw)
+        writer = _MemWriter()
+        await _drive_handler(fe, clk, reader, writer)
+        return bytes(writer.buf)
+
+    async def run():
+        health = await roundtrip(b"GET /healthz HTTP/1.1\r\n\r\n")
+        bad = await roundtrip(_post("/v1/generate", {"max_new": 4}))
+        too_long = await roundtrip(_post("/v1/generate",
+                                         {"prompt": [1] * 1000,
+                                          "max_new": 4}))
+        lost = await roundtrip(b"GET /nope HTTP/1.1\r\n\r\n")
+        metrics = await roundtrip(b"GET /metrics HTTP/1.1\r\n\r\n")
+        return health, bad, too_long, lost, metrics
+
+    health, bad, too_long, lost, metrics = asyncio.run(run())
+    assert health.startswith(b"HTTP/1.1 200") and b'"ok": true' in health
+    assert bad.startswith(b"HTTP/1.1 400")
+    assert too_long.startswith(b"HTTP/1.1 400")
+    assert lost.startswith(b"HTTP/1.1 404")
+    assert metrics.startswith(b"HTTP/1.1 200")
+    assert b"frontend_requests_total" in metrics
+
+
+def test_http_backpressure_429():
+    fe, srv, clk = _sim_frontend()
+    fe.max_pending = 2
+    for _ in range(2):
+        fe.submit(np.asarray([1, 2], np.int32), 4)
+
+    async def run():
+        reader = asyncio.StreamReader()
+        reader.feed_data(_post("/v1/generate",
+                               {"prompt": [1, 2], "max_new": 4}))
+        writer = _MemWriter()
+        # respond-then-close happens before any tick is needed
+        await fe.handle_connection(reader, writer)
+        return bytes(writer.buf)
+
+    raw = asyncio.run(run())
+    assert raw.startswith(b"HTTP/1.1 429")
+    assert fe._c_rejected.value == 1
+    fe.run_until_idle()  # the two accepted requests still finish
+    assert all(h.state == FINISHED for h in fe.handles.values())

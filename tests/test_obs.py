@@ -453,6 +453,53 @@ def test_cancel_splits_abort_reasons_and_frees_pages(tiny):
     srv.sched.alloc.check()
 
 
+def test_cancel_latency_reconciles_histogram_and_trace():
+    """PR 7 satellite: the disconnect→pages-freed gap must tell one
+    story in two places — the ``serving_cancel_latency_s`` histogram
+    and the request's async span (``disconnect`` instant + the
+    ``cancel_latency_s`` arg on its end event) — bit-equal, on the
+    shared injected clock."""
+    from repro.serving.clock import FakeClock as ManualClock
+    from repro.serving.frontend import CANCELLED, ServingFrontend
+    from repro.serving.sim import SimServer
+
+    clk = ManualClock(start=50.0)
+    tr = Tracer(clock=clk)
+    m = ServingMetrics(clock=clk, tracer=tr)
+    srv = SimServer(metrics=m)
+    fe = ServingFrontend(srv, clock=clk)
+    h = fe.submit(np.arange(6, dtype=np.int32), 20)
+    for _ in range(4):
+        fe.tick()
+        clk.advance(0.001)
+    assert h.tokens  # mid-decode, not a pending cancel
+    t_disc = clk()
+    h.cancel()  # client disconnect: stamps t_disc on the timeline
+    clk.advance(0.0035)  # gap until the next tick boundary
+    fe.tick()  # abort lands here; latency = 0.0035
+    assert h.state == CANCELLED
+    tl = m.requests[h.rid]
+    assert tl.disconnect_t == t_disc
+    lat = tl.finish_t - tl.disconnect_t
+    assert lat == pytest.approx(0.0035)
+    assert m.cancel_latency.count == 1
+    assert m.cancel_latency.sum == lat  # the same float, not a re-derivation
+    evs = chrome_trace(tr)["traceEvents"]
+    disc = [e for e in evs if e["ph"] == "n" and e["name"] == "disconnect"
+            and e.get("id") == h.rid]
+    assert len(disc) == 1
+    end = next(e for e in evs if e["ph"] == "e"
+               and e.get("cat") == "request" and e["id"] == h.rid)
+    assert end["args"]["cancel_latency_s"] == lat
+    # the span geometry agrees too: end - disconnect == latency (in us)
+    assert end["ts"] - disc[0]["ts"] == pytest.approx(lat * 1e6)
+    s = m.summary()
+    assert s["requests_aborted_cancelled"] == 1.0
+    assert s["cancel_latency_mean_s"] == lat
+    assert validate_chrome_trace(chrome_trace(tr)) == []
+    assert validate_prometheus_text(m.prometheus_text()) == []
+
+
 def test_flocking_telemetry_does_not_perturb_serving(tiny):
     """The dense probe runs over live pools without donating them:
     outputs must be token-identical with telemetry on, gauges must be
