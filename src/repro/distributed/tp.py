@@ -260,6 +260,41 @@ class PagedTP:
             )
         return self._steps[key]
 
+    def draft_verify(self, pool_specs: Any, pruned: Any, num_steps: int,
+                     spec_k: int) -> Callable:
+        """Fused speculative round (``decoder.draft_verify_paged``) —
+        draft scan plus dense verify in one program — shard_mapped like
+        ``decode``: the scan body's logits come out replicated (psum
+        after out-/down-projection), so every shard's in-scan ``argmax``
+        feedback picks the same token, the on-device verify matrix is
+        identical across shards, and the drafts + verify logits are
+        replicated host-visible state — token-identity with the
+        single-device round holds by the same argument as every other
+        step.  ``num_steps`` is static (one program per distinct padded
+        round length, bounded by log2(spec_k)+1)."""
+        key = ("draft_verify", self._pruned_key(pruned), num_steps, spec_k)
+        if key not in self._steps:
+            cfg_l, axis, backend = self.cfg_local, self.axis, self.backend
+
+            def local(params, pools, bts, toks, pos, ks, live, pr):
+                with shlib.tp_axis(axis):
+                    drafts, vlogits, new_pools = decoder.draft_verify_paged(
+                        params, cfg_l, pools, bts, toks, pos, ks, live,
+                        pruned=pr, num_steps=num_steps, spec_k=spec_k,
+                        backend=backend,
+                    )
+                return drafts, vlogits, new_pools
+
+            pr_specs = P() if pruned is None else self.pruned_pspecs(pruned)
+            self._steps[key] = self._wrap(
+                local,
+                (self.param_specs, pool_specs, P(), P(), P(), P(), P(),
+                 pr_specs),
+                (P(), P(), pool_specs),
+                donate=(1,),
+            )
+        return self._steps[key]
+
     def probe(self, pool_specs: Any) -> Callable:
         """Dense stats-only decode step for flocking telemetry
         (``obs.flocking``): runs the un-pruned model with

@@ -67,6 +67,19 @@ def main() -> None:
                     help="self-speculative decoding: tokens drafted per "
                          "verify with the GRIFFIN-compacted weights "
                          "(requires GRIFFIN; output stays dense-exact)")
+    ap.add_argument("--spec-impl", default="fused",
+                    choices=["fused", "per_token"],
+                    help="draft-loop implementation: 'fused' runs the "
+                         "whole k-token draft + verify round as one "
+                         "lax.scan device program (one dispatch + one "
+                         "host sync per round); 'per_token' is the "
+                         "legacy one-dispatch-per-draft-token host "
+                         "loop, kept as a differential oracle (output "
+                         "is token-identical either way)")
+    ap.add_argument("--no-adaptive-spec", action="store_true",
+                    help="pin the draft length at --spec-k instead of "
+                         "adapting it per request from the live "
+                         "acceptance EWMA")
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable shared-prefix paged-KV reuse (radix "
                          "cache + copy-on-write pages; output is "
@@ -187,7 +200,9 @@ def main() -> None:
             cfg, params, gcfg=gcfg, page_size=args.page_size,
             num_pages=args.num_pages, n_slots=args.slots,
             prefill_chunk=args.prefill_chunk, max_len=args.max_len,
-            spec_k=args.spec_k, prefix_cache=not args.no_prefix_cache,
+            spec_k=args.spec_k, spec_impl=args.spec_impl,
+            adaptive_spec=not args.no_adaptive_spec,
+            prefix_cache=not args.no_prefix_cache,
             kernel_backend=args.kernel_backend, mesh=mesh,
             tp_axis=args.mesh[0] if args.mesh else "model",
             tracer=tracer, flocking_every=args.flocking_telemetry,
@@ -242,7 +257,9 @@ def main() -> None:
         if args.spec_k:
             print(f"  spec: acceptance={m['acceptance_rate']:.3f} "
                   f"tokens/verify={m['tokens_per_verify']:.2f} "
-                  f"rounds={m['spec_rounds']:.0f}")
+                  f"rounds={m['spec_rounds']:.0f} "
+                  f"k_mean={m['draft_k_mean']:.2f} "
+                  f"capped_rounds={m['spec_capped_rounds']:.0f}")
         if args.flocking_telemetry and srv.flocking is not None \
                 and srv.flocking.last:
             vals = list(srv.flocking.last.values())

@@ -833,6 +833,62 @@ def decode_step_paged(
     return logits, new_pools, (stats_tree if collect_stats else None)
 
 
+def draft_loop_paged(
+    params: Dict,
+    cfg,
+    pools: Dict,
+    block_tables: jax.Array,  # [B, n_pages] int32, -1 = unallocated
+    token: jax.Array,  # [B, 1] int32: last committed token per slot
+    pos: jax.Array,  # [B] int32 committed KV length per slot
+    k_r: jax.Array,  # [B] int32 per-slot draft lengths (<= num_steps)
+    pruned: Optional[Dict] = None,  # per-slot compacted FF tree (the draft)
+    *,
+    num_steps: int,
+    backend: str = "gather",
+) -> Tuple[jax.Array, Dict]:
+    """Fused k-token self-speculative draft loop: one device program.
+
+    Runs ``num_steps`` greedy draft iterations of the ``[B, 1]`` paged
+    decode step inside a single ``lax.scan`` — argmax feedback, draft-KV
+    page writes, and the per-slot GRIFFIN-compacted FF weights all stay
+    on device, so a round costs one dispatch and one host sync instead
+    of ``num_steps`` of each (the serving-path host loop this replaces;
+    ``PagedServer._run_speculative``).
+
+    Per-slot masking: slot ``b`` participates in iteration ``i`` only
+    while ``i < k_r[b]``.  A masked slot's KV write is suppressed
+    exactly like the host loop's (``write_mask`` row False → trash-page
+    redirect in the gather oracle, row skip in the fused kernel) and
+    its carried token is frozen with ``jnp.where``, so its logits past
+    ``k_r[b]`` are garbage that nothing consumes — the caller slices
+    each slot's first ``k_r[b]`` drafts.
+
+    ``num_steps`` is static (``max(k_r)`` at the call site), so the
+    compiled-program count is bounded by ``spec_k`` distinct lengths.
+    Greedy drafts are bit-identical to the per-token host loop: each
+    iteration traces the very same ``decode_step_paged`` body, and
+    ``jnp.argmax`` and ``np.argmax`` share first-max tie-breaking.
+
+    Returns (draft tokens [B, num_steps] int32, new pools).
+    """
+
+    def body(carry, i):
+        tok, pl = carry
+        live = i < k_r  # [B] bool
+        logits, pl, _ = decode_step_paged(
+            params, cfg, pl, block_tables, tok, pos + i,
+            write_mask=live[:, None], pruned=pruned, backend=backend,
+        )
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        tok = jnp.where(live[:, None], nxt[:, None], tok)
+        return (tok, pl), nxt
+
+    (_, pools), drafts = jax.lax.scan(
+        body, (token, pools), jnp.arange(num_steps, dtype=jnp.int32)
+    )
+    return jnp.swapaxes(drafts, 0, 1), pools
+
+
 def verify_step_paged(
     params: Dict,
     cfg,
@@ -867,6 +923,62 @@ def verify_step_paged(
         backend=backend,
     )
     return logits, pools
+
+
+def draft_verify_paged(
+    params: Dict,
+    cfg,
+    pools: Dict,
+    block_tables: jax.Array,  # [B, n_pages] int32, -1 = unallocated
+    token: jax.Array,  # [B, 1] int32: last committed token per slot
+    pos: jax.Array,  # [B] int32 committed KV length per slot
+    k_r: jax.Array,  # [B] int32 per-slot draft lengths (0 = no drafting)
+    row_live: jax.Array,  # [B] bool: slot holds a planned request
+    pruned: Optional[Dict] = None,  # per-slot compacted FF tree (the draft)
+    *,
+    num_steps: int,
+    spec_k: int,
+    backend: str = "gather",
+) -> Tuple[jax.Array, jax.Array, Dict]:
+    """Whole speculative round — draft scan *and* dense verify — as one
+    device program.
+
+    ``draft_loop_paged`` already collapses the k draft steps into one
+    dispatch, but a round then still pays a second dispatch + host sync
+    to verify.  At decode batch sizes the per-dispatch overhead rivals
+    the model compute, so fusing the verify in here halves the round's
+    fixed cost: the drafts feed the ``[B, spec_k+1]`` verify matrix
+    on-device (last committed token in column 0, each slot's drafts
+    after it) and the host syncs once, pulling drafts and verify logits
+    together after the single dispatch.
+
+    ``row_live`` distinguishes an empty decode slot (verify row fully
+    masked, like the vanilla step's dead rows) from a live request that
+    drafted 0 tokens this round (pool pressure): the latter's verify
+    row is just its last committed token, i.e. exactly a vanilla dense
+    step for that slot.  ``num_steps`` may exceed ``spec_k`` (the
+    caller pads it to a power of two to bound compiled-program count);
+    surplus draft columns are dropped — every ``k_r`` is <= both.
+
+    Returns (drafts [B, num_steps], verify logits [B, spec_k+1, V],
+    new pools).
+    """
+    drafts, pools = draft_loop_paged(
+        params, cfg, pools, block_tables, token, pos, k_r, pruned,
+        num_steps=num_steps, backend=backend,
+    )
+    B = token.shape[0]
+    cols = min(num_steps, spec_k)
+    vtoks = jnp.concatenate(
+        [token, drafts[:, :cols],
+         jnp.zeros((B, spec_k - cols), jnp.int32)], axis=1)
+    idx = jnp.arange(spec_k + 1, dtype=jnp.int32)[None, :]
+    vmask = row_live[:, None] & (idx <= k_r[:, None])
+    vlogits, pools = verify_step_paged(
+        params, cfg, pools, block_tables, vtoks, pos, vmask,
+        backend=backend,
+    )
+    return drafts, vlogits, pools
 
 
 # ---------------------------------------------------------------------------

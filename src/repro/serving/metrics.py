@@ -161,6 +161,10 @@ class ServingMetrics:
     draft_tokens: int = 0
     accepted_draft_tokens: int = 0
     spec_committed_tokens: int = 0
+    # rounds whose draft lengths the server clamped to its prefill-
+    # interleave cap (pending prefill work must not wait behind full-k
+    # spec rounds — the spec-mode TTFT guard)
+    spec_capped_rounds: int = 0
     # prefix cache (radix trie over prompt prefixes, serving/prefix.py)
     prefix_lookups: int = 0
     prefix_hits: int = 0
@@ -300,6 +304,11 @@ class ServingMetrics:
         self.tracer.ainstant(rid, "spec_round", drafted=drafted,
                              accepted=accepted, committed=committed)
 
+    def on_spec_cap(self) -> None:
+        """One spec round planned with draft lengths clamped by the
+        server's prefill-interleave cap (pending prefill work)."""
+        self.spec_capped_rounds += 1
+
     def on_preemption(self, rid: int) -> None:
         r = self.requests[rid]
         r.preemptions += 1
@@ -393,7 +402,13 @@ class ServingMetrics:
             "pool_occupancy_mean": self.pool_occupancy.mean,
             "decode_batch_mean": self.decode_batch_sizes.mean,
             "spec_rounds": float(self.spec_rounds),
+            "spec_capped_rounds": float(self.spec_capped_rounds),
             "draft_tokens": float(self.draft_tokens),
+            # mean drafted tokens per round per request — with the
+            # adaptive controller this drifts from the configured spec_k
+            # toward each request's measured payoff
+            "draft_k_mean": self.draft_tokens / self.spec_rounds
+            if self.spec_rounds else 0.0,
             "acceptance_rate": self.accepted_draft_tokens / self.draft_tokens
             if self.draft_tokens else 0.0,
             "tokens_per_verify": self.spec_committed_tokens / self.spec_rounds
@@ -420,7 +435,8 @@ class ServingMetrics:
         "requests_aborted_cancelled", "requests_aborted_shed",
         "generated_tokens",
         "aborted_generated_tokens", "preemptions", "prefill_chunks",
-        "steps", "spec_rounds", "draft_tokens", "saved_prefill_tokens",
+        "steps", "spec_rounds", "spec_capped_rounds", "draft_tokens",
+        "saved_prefill_tokens",
         "prefix_inserts", "prefix_evictions", "prefix_evicted_refs",
         "cow_copies",
     })

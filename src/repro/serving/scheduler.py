@@ -67,6 +67,70 @@ from repro.serving.prefix import PrefixCache
 QUEUED, PREFILLING, DECODING, FINISHED = "queued", "prefilling", "decoding", "finished"
 
 
+class SpecController:
+    """Per-request adaptive draft-length (``spec_k``) controller.
+
+    Drafting cost should track its measured payoff: a request whose
+    drafts the dense verifier keeps rejecting wastes ``k`` compacted
+    steps per round to commit ~1 token, while a high-acceptance request
+    leaves committed tokens on the table at small ``k``.  The server
+    feeds each round's acceptance (the same numbers
+    ``ServingMetrics.on_spec_round`` records) into ``observe``; the
+    controller keeps an EWMA of the per-round acceptance fraction and
+    moves that request's draft length one step at a time:
+
+    * EWMA >= ``grow_at``  -> ``k += 1`` (capped at ``spec_k``),
+    * EWMA <= ``shrink_at`` -> ``k -= 1`` (floored at ``min_k``),
+    * in between           -> hold.
+
+    Hysteresis (``grow_at > shrink_at``) plus the one-step moves keep
+    ``k`` from oscillating on noisy acceptance.  Requests start
+    optimistic at ``spec_k`` (flocking says drafts are usually good)
+    and state is keyed by rid, so a preempted request resumes with its
+    learned draft length; ``forget`` drops state when the request
+    finishes or aborts.  The policy is a pure function of the
+    acceptance trace — no clocks — so greedy token identity is
+    untouched (any per-round ``k`` commits the same dense greedy
+    stream) and unit tests drive it with synthetic traces
+    (``tests/test_speculative.py``).
+    """
+
+    def __init__(self, spec_k: int, *, min_k: int = 1, alpha: float = 0.5,
+                 grow_at: float = 0.7, shrink_at: float = 0.35):
+        assert spec_k >= 1 and 1 <= min_k <= spec_k
+        assert 0.0 <= shrink_at < grow_at <= 1.0 and 0.0 < alpha <= 1.0
+        self.spec_k, self.min_k = spec_k, min_k
+        self.alpha, self.grow_at, self.shrink_at = alpha, grow_at, shrink_at
+        self._k: Dict[int, int] = {}
+        self._ewma: Dict[int, float] = {}
+
+    def k_for(self, rid: int) -> int:
+        """Current draft length for ``rid`` (``spec_k`` until observed)."""
+        return self._k.get(rid, self.spec_k)
+
+    def observe(self, rid: int, drafted: int, accepted: int) -> int:
+        """Fold one round's acceptance in; returns the updated ``k``.
+        Rounds that drafted nothing (pool-pressure ``k_r = 0``) carry no
+        acceptance signal and leave the state untouched."""
+        if drafted <= 0:
+            return self.k_for(rid)
+        frac = accepted / drafted
+        prev = self._ewma.get(rid, frac)
+        ewma = self.alpha * frac + (1.0 - self.alpha) * prev
+        self._ewma[rid] = ewma
+        k = self.k_for(rid)
+        if ewma >= self.grow_at:
+            k = min(k + 1, self.spec_k)
+        elif ewma <= self.shrink_at:
+            k = max(k - 1, self.min_k)
+        self._k[rid] = k
+        return k
+
+    def forget(self, rid: int) -> None:
+        self._k.pop(rid, None)
+        self._ewma.pop(rid, None)
+
+
 @dataclass
 class ScheduledRequest:
     rid: int
@@ -157,6 +221,10 @@ class Scheduler:
         # trie nodes may serve a request that still needs to select its
         # experts, and stat-less prompts are not published
         self.needs_stats = False
+        # set by the server in speculative mode: per-request adaptive
+        # draft lengths (state survives preemption, dies with the
+        # request — _finish/_abort call forget)
+        self.spec_ctl: Optional[SpecController] = None
         self._seq = itertools.count()
         self.queue: List[ScheduledRequest] = []
         self.prefilling: Optional[ScheduledRequest] = None
@@ -334,6 +402,8 @@ class Scheduler:
         req.aborted = True
         req.slot = None
         self.finished[req.rid] = req
+        if self.spec_ctl is not None:
+            self.spec_ctl.forget(req.rid)
         self.metrics.on_finish(req.rid, aborted=True, reason=reason)
 
     def cancel(self, rid: int, reason: str = "cancelled") -> bool:
@@ -554,6 +624,8 @@ class Scheduler:
         req.state = FINISHED
         req.slot = None
         self.finished[req.rid] = req
+        if self.spec_ctl is not None:
+            self.spec_ctl.forget(req.rid)
         self.metrics.on_finish(req.rid)
 
     # -- state -------------------------------------------------------------

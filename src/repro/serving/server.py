@@ -58,25 +58,38 @@ sequence, so its greedy continuations usually match the dense model's.
 One speculative tick per decode batch:
 
   1. **plan + reserve** — each planned request gets a draft length
-     ``k_r = min(spec_k, remaining_budget - 1, capacity headroom)`` and
-     pre-reserves pages for its ``k_r`` draft positions + 1 bonus
-     position, without preemption (``Scheduler.reserve_draft``); a
-     request that cannot reserve (pool pressure) drafts 0 tokens and
-     its verify row degenerates to a vanilla dense decode step.  Only
-     when nobody can draft does the whole tick fall back to one-token
-     *dense* decode — with ``spec_k`` the compacted weights are only
-     ever the draft, so fallback ticks must not use them.
-  2. **draft** — up to ``max(k_r)`` iterations of the ordinary
-     ``[n_slots, 1]`` decode program *with the per-slot compacted
-     weights*, each writing draft KV and extending each request's
-     draft chain greedily (requests past their own ``k_r`` mask out).
-  3. **verify** — one ``[n_slots, spec_k + 1]`` dense pass
-     (``decoder.verify_step_paged``) re-scores the last committed token
-     plus each request's drafts (rows masked to ``k_r + 1``),
-     overwriting draft KV with dense KV at every position it touches.
+     ``k_r = min(k_adaptive, prefill cap, remaining_budget - 1,
+     capacity headroom)`` and pre-reserves pages for its ``k_r`` draft
+     positions + 1 bonus position, without preemption
+     (``Scheduler.reserve_draft``); a request that cannot reserve (pool
+     pressure) drafts 0 tokens and its verify row degenerates to a
+     vanilla dense decode step.  ``k_adaptive`` is the request's
+     learned draft length (``Scheduler.spec_ctl``, a
+     ``SpecController`` fed by each round's acceptance; disable with
+     ``adaptive_spec=False`` for a fixed ``spec_k``).  While prefill
+     work is pending, ``k_r`` is clamped to ``spec_prefill_cap``
+     (default 1) so waiting prompts' chunks interleave with short spec
+     rounds instead of stalling behind full-``k`` ones — the spec-mode
+     TTFT guard.  Only when nobody can draft does the whole tick fall
+     back to one-token *dense* decode — with ``spec_k`` the compacted
+     weights are only ever the draft, so fallback ticks must not use
+     them.
+  2. **draft + verify** — ONE fused device program
+     (``decoder.draft_verify_paged``): a ``lax.scan`` runs the greedy
+     draft iterations *with the per-slot compacted weights* (argmax
+     feedback, draft-KV page writes, per-slot ``k_r`` masking all on
+     device), then the same program re-scores the last committed token
+     plus each slot's drafts in a ``[n_slots, spec_k + 1]`` dense
+     verify pass (rows masked to ``k_r + 1``), overwriting draft KV
+     with dense KV at every position it touches.  The whole round
+     costs one dispatch + one host sync instead of one of each per
+     draft token plus a verify dispatch (``spec_impl="per_token"``
+     keeps the old host loop + standalone verify as the differential
+     oracle; CI diffs the two).
   4. **commit + rollback** — the greedy acceptance walk
      (``sampling.greedy_verify``) commits accepted drafts plus one
-     correction/bonus token through the ordinary scheduler callbacks;
+     correction/bonus token through the ordinary scheduler callbacks
+     (acceptance also feeds the adaptive controller);
      ``Scheduler.rollback_draft`` returns unused draft pages so
      allocator state is bit-identical to never having drafted.
 
@@ -109,6 +122,7 @@ from repro.serving.scheduler import (
     PrefillWork,
     ScheduledRequest,
     Scheduler,
+    SpecController,
 )
 
 
@@ -125,6 +139,9 @@ class PagedServer:
         prefill_chunk: int = 32,
         max_len: int = 256,
         spec_k: int = 0,
+        spec_impl: str = "fused",
+        adaptive_spec: bool = True,
+        spec_prefill_cap: int = 1,
         prefix_cache: bool = True,
         kernel_backend: str = "auto",
         metrics: Optional[ServingMetrics] = None,
@@ -155,6 +172,14 @@ class PagedServer:
                 "draft model"
             )
         self.spec_k = spec_k
+        if spec_impl not in ("fused", "per_token"):
+            raise ValueError(
+                f"spec_impl: 'fused' (lax.scan draft loop) or 'per_token' "
+                f"(host-loop differential oracle), got {spec_impl!r}"
+            )
+        self.spec_impl = spec_impl
+        self.adaptive_spec = adaptive_spec
+        self.spec_prefill_cap = spec_prefill_cap
         self.backend = resolve_attn_backend(kernel_backend)
         self.mesh = mesh
         self.tp = None
@@ -178,6 +203,8 @@ class PagedServer:
         self.sched = Scheduler(self.pcfg, n_slots, prefill_chunk,
                                metrics=metrics, prefix_cache=prefix_cache)
         self.sched.needs_stats = self.gcfg is not None
+        if spec_k and adaptive_spec:
+            self.sched.spec_ctl = SpecController(spec_k)
         self.pools = decoder.init_paged_pools(cfg, num_pages, page_size)
         self.pruned_slots: Optional[Dict] = None  # per-slot compacted FF
         self._next_rid = 0
@@ -223,8 +250,15 @@ class PagedServer:
                 fn = tp.decode(pool_specs, pruned)
                 return fn(params, pools, bts, toks, pos, mask, pruned)
 
+            def draft_verify_tp(params, pools, bts, toks, pos, kr, live,
+                                pruned, num_steps):
+                fn = tp.draft_verify(pool_specs, pruned, num_steps,
+                                     self.spec_k)
+                return fn(params, pools, bts, toks, pos, kr, live, pruned)
+
             self._prefill = prefill_tp
             self._decode = decode_tp
+            self._draft_verify = draft_verify_tp
             self._verify = tp.verify(pool_specs)
             self._cow_copy = tp.cow(pool_specs)
             if flocking_every:
@@ -253,6 +287,25 @@ class PagedServer:
             return logits, pools
 
         self._decode = jax.jit(dec, donate_argnums=(1,))
+
+        # the fused speculative round: draft scan + dense verify in one
+        # program, so a round costs a single dispatch and a single host
+        # sync.  num_steps is static (pow2-padded max k_r this round),
+        # so at most log2(spec_k)+1 distinct programs compile; pools
+        # donated like every other step
+        spec_k_static = self.spec_k
+
+        def draft_verify(params, pools, bts, toks, pos, kr, live, pruned,
+                         num_steps):
+            return decoder.draft_verify_paged(
+                params, cfg, pools, bts, toks, pos, kr, live,
+                pruned=pruned, num_steps=num_steps, spec_k=spec_k_static,
+                backend=backend,
+            )
+
+        self._draft_verify = jax.jit(draft_verify,
+                                     static_argnames=("num_steps",),
+                                     donate_argnums=(1,))
 
         def verify(params, pools, bts, toks, pos, mask):
             return decoder.verify_step_paged(
@@ -286,6 +339,30 @@ class PagedServer:
     @property
     def metrics(self) -> ServingMetrics:
         return self.sched.metrics
+
+    def reset_metrics(self) -> ServingMetrics:
+        """Swap in a fresh ``ServingMetrics`` (same clock + tracer) and
+        re-home the registry-backed monitors on it.
+
+        For steady-state measurement: drain a warmup trace first (it
+        compiles every serving program this workload will hit), call
+        this, then run the timed trace — percentiles, counters and the
+        throughput window then cover only post-warmup requests instead
+        of charging XLA compilation to the first requests' latencies.
+        Call only between drains (no live requests — per-request
+        timelines would be lost mid-flight).  Serving state is
+        deliberately untouched: pages, prefix cache and adaptive
+        ``spec_k`` controller state all survive, because resetting
+        *measurement* must not change *behavior*."""
+        old = self.sched.metrics
+        assert not self.sched.has_work, \
+            "reset_metrics with live requests would drop their timelines"
+        fresh = ServingMetrics(clock=old.clock, tracer=old.tracer)
+        self.sched.metrics = fresh
+        self.steps_mon = StepTimeMonitor(fresh.registry)
+        if self.flocking is not None:
+            self.flocking = FlockingMonitor(self.gcfg, fresh.registry)
+        return fresh
 
     def submit(self, prompt: np.ndarray, max_new: int,
                rid: Optional[int] = None, priority: int = 0,
@@ -330,7 +407,8 @@ class PagedServer:
                     with tr.span("flocking_probe", cat="obs",
                                  batch=len(plan.decode)):
                         self._run_flocking_probe(plan.decode)
-                ks = self._plan_spec(plan.decode) if self.spec_k else None
+                ks = self._plan_spec(plan.decode, plan) if self.spec_k \
+                    else None
                 if ks:
                     with tr.span("spec_round", batch=len(plan.decode),
                                  drafted=sum(ks.values())):
@@ -543,32 +621,67 @@ class PagedServer:
                                  angular=v["angular"])
 
     # -- speculative draft / verify / commit / rollback --------------------
-    def _plan_spec(self, reqs: List[ScheduledRequest]) -> Optional[Dict[int, int]]:
+    def _plan_spec(self, reqs: List[ScheduledRequest],
+                   plan) -> Optional[Dict[int, int]]:
         """Per-request draft lengths for a speculative tick, pages
         reserved.
 
-        ``k_r = min(spec_k, remaining_budget - 1, capacity headroom)``
-        — drafting past a request's ``max_new`` or block-table capacity
-        is pure waste, and one constrained request must not disable
-        speculation for the whole batch.  A request whose reservation
-        fails (pool pressure) drafts 0 tokens this round: its verify
-        row then contains only its last committed token, which makes
-        that row exactly a vanilla dense decode step, already covered
-        by ``plan_step``'s page guarantee.  Returns ``rid -> k_r``, or
-        None when nobody can draft (the tick runs vanilla)."""
+        ``k_r = min(k_adaptive, prefill cap, remaining_budget - 1,
+        capacity headroom)`` — drafting past a request's ``max_new`` or
+        block-table capacity is pure waste, and one constrained request
+        must not disable speculation for the whole batch.
+        ``k_adaptive`` is the request's learned draft length
+        (``SpecController``; ``spec_k`` when the controller is off).
+
+        The *prefill cap*: while a prompt is actively prefilling — a
+        chunk in this very plan or a request mid-prefill — a
+        full-``k`` round would stretch every tick by ~``k`` sequential
+        model steps while that prompt's chunks crawl through one tick
+        at a time, which is exactly the spec-mode TTFT inflation the
+        benchmark used to show.  Capping ``k_r`` at
+        ``spec_prefill_cap`` (default 1) keeps ticks near dense-tick
+        latency until the chunks land, so prefill interleaves with
+        (rather than waits behind) spec rounds; the SLO/EDF queue
+        order decides *which* request prefills, this cap only stops
+        drafting from monopolizing the tick.  Merely *queued* requests
+        do not engage the cap: a prompt that cannot start prefilling
+        yet (no pages / no slot) gains no latency from shorter rounds,
+        while the cap would pin every concurrent decode at ``k_r = 1``
+        for as long as the backlog lasts — under sustained load that
+        is forever, and speculation silently degenerates to
+        2-dispatches-per-token.  Greedy token identity is unaffected —
+        any ``k_r`` commits the same dense stream.
+
+        A request whose reservation fails (pool pressure) drafts 0
+        tokens this round: its verify row then contains only its last
+        committed token, which makes that row exactly a vanilla dense
+        decode step, already covered by ``plan_step``'s page guarantee.
+        Returns ``rid -> k_r``, or None when nobody can draft (the tick
+        runs vanilla)."""
         if not all(r.compacted for r in reqs):
             return None
+        ctl = self.sched.spec_ctl
+        prefill_pending = (plan.prefill is not None
+                           or self.sched.prefilling is not None)
+        cap = self.spec_prefill_cap if prefill_pending else self.spec_k
         ks: Dict[int, int] = {}
+        capped = False
         for r in reqs:
-            k = min(self.spec_k,
+            want = ctl.k_for(r.rid) if ctl is not None else self.spec_k
+            k = min(want,
                     r.max_new - len(r.generated) - 1,
                     self.pcfg.max_request_len - r.cache_len - 1)
             k = max(0, k)
+            if k > cap:
+                k = cap
+                capped = True
             if k and not self.sched.reserve_draft(r, k):
                 k = 0
             ks[r.rid] = k
         if not any(ks.values()):
             return None
+        if capped:
+            self.sched.metrics.on_spec_cap()
         return ks
 
     def _run_speculative(self, reqs: List[ScheduledRequest],
@@ -587,53 +700,112 @@ class PagedServer:
             last[req.rid] = req.generated[-1]
             draft[req.rid] = []
         bts_j = jnp.asarray(bts)
+        num_steps = max(ks.values())
 
-        # draft: greedy steps with the per-slot compacted weights; a
-        # request past its own k_r masks out (write -> trash page)
-        for i in range(max(ks.values())):
+        # modeled attention traffic: at draft iteration ``i`` only the
+        # slots still inside their own ``k_r`` are live — masked rows
+        # never land in the gauge (counting ``rows=B`` here overstated
+        # ``attn_bytes_per_token`` in spec mode), and the verify pass
+        # reads one row per planned request, not per slot
+        for i in range(num_steps):
+            live = [r for r in reqs if i < ks[r.rid]]
+            self._count_attn_bytes(
+                [base[r.rid] + i for r in live], 1, W, rows=len(live)
+            )
+
+        if self.spec_impl == "fused":
+            # the whole round — k-step lax.scan draft chain (argmax
+            # feedback, per-slot k_r masking, draft-KV page writes,
+            # compacted per-slot experts) AND the [B, K+1] dense verify
+            # — runs as ONE device program with ONE host sync
+            # (decoder.draft_verify_paged), vs the legacy loop's
+            # dispatch + sync per draft token plus a verify dispatch.
+            # The scan length pads to the next power of two and the
+            # block table to its static maximum width: the program is
+            # compiled per (num_steps, width), so both pads bound the
+            # distinct-program count at log2(spec_k)+1 total instead of
+            # spec_k x log2(max_pages) — without them short benches and
+            # adaptive-k churn recompile the scan until it loses to the
+            # legacy loop.  Identity is untouched: padded iterations
+            # write nothing (k_r mask) and their tokens are sliced off,
+            # and dead tail pages sit past every live position, so the
+            # causal mask never reads them (see _live_width).
+            n_scan = 1 << (num_steps - 1).bit_length()
+            Wd = self.pcfg.max_pages_per_request
+            btsd = np.full((B, Wd), -1, np.int32)
             toks = np.zeros((B, 1), np.int32)
             pos = np.zeros((B,), np.int32)
-            mask = np.zeros((B, 1), bool)
+            kr_arr = np.zeros((B,), np.int32)
+            live_arr = np.zeros((B,), bool)
             for req in reqs:
                 s = req.slot
+                btsd[s] = req.table.as_array(Wd)
                 toks[s, 0] = last[req.rid]
-                pos[s] = base[req.rid] + i
-                mask[s, 0] = i < ks[req.rid]
-            self._count_attn_bytes(
-                [base[r.rid] + i for r in reqs if i < ks[r.rid]], 1, W,
-                rows=B,
-            )
-            logits, self.pools = self._decode(
-                self.params, self.pools, bts_j, jnp.asarray(toks),
-                jnp.asarray(pos), jnp.asarray(mask), self.pruned_slots,
-            )
-            logits = np.asarray(logits)
+                pos[s] = base[req.rid]
+                kr_arr[s] = ks[req.rid]
+                live_arr[s] = True
+            with self.tracer.jax_annotation("draft_verify"):
+                dr, vlogits, self.pools = self._draft_verify(
+                    self.params, self.pools, jnp.asarray(btsd),
+                    jnp.asarray(toks), jnp.asarray(pos),
+                    jnp.asarray(kr_arr), jnp.asarray(live_arr),
+                    self.pruned_slots, n_scan,
+                )
+            dr = np.asarray(dr)  # [slots, num_steps]
+            vlogits = np.asarray(vlogits)  # [slots, K+1, V]
             for req in reqs:
-                if i < ks[req.rid]:
-                    t = int(np.argmax(logits[req.slot, 0]))
-                    draft[req.rid].append(t)
-                    last[req.rid] = t
+                draft[req.rid] = [int(t)
+                                  for t in dr[req.slot, : ks[req.rid]]]
+        else:
+            # legacy per-token host loop — one jitted step, one device
+            # sync and one host argmax per draft token.  Kept as the
+            # differential oracle for the fused scan: CI runs both modes
+            # and fails on any greedy divergence (benchmarks/run.py
+            # --only speculative).
+            for i in range(num_steps):
+                toks = np.zeros((B, 1), np.int32)
+                pos = np.zeros((B,), np.int32)
+                mask = np.zeros((B, 1), bool)
+                for req in reqs:
+                    s = req.slot
+                    toks[s, 0] = last[req.rid]
+                    pos[s] = base[req.rid] + i
+                    mask[s, 0] = i < ks[req.rid]
+                logits, self.pools = self._decode(
+                    self.params, self.pools, bts_j, jnp.asarray(toks),
+                    jnp.asarray(pos), jnp.asarray(mask), self.pruned_slots,
+                )
+                logits = np.asarray(logits)
+                for req in reqs:
+                    if i < ks[req.rid]:
+                        t = int(np.argmax(logits[req.slot, 0]))
+                        draft[req.rid].append(t)
+                        last[req.rid] = t
 
-        # verify: one dense pass over last committed token + each
-        # request's drafts (static [B, K+1] shape, rows masked to k_r+1)
-        vtoks = np.zeros((B, K + 1), np.int32)
-        vpos = np.zeros((B,), np.int32)
-        vmask = np.zeros((B, K + 1), bool)
-        for req in reqs:
-            s, kr = req.slot, ks[req.rid]
-            vtoks[s, 0] = req.generated[-1]
-            vtoks[s, 1 : kr + 1] = draft[req.rid]
-            vpos[s] = base[req.rid]
-            vmask[s, : kr + 1] = True
+        # verify accounting: one dense pass over last committed token +
+        # each request's drafts (static [B, K+1] shape, rows masked to
+        # k_r+1).  The fused path already produced the verify logits
+        # inside the round's single program; the legacy path dispatches
+        # the standalone verify step here.
         self._count_attn_bytes(
-            [base[r.rid] + ks[r.rid] for r in reqs], 1, W, rows=B
+            [base[r.rid] + ks[r.rid] for r in reqs], 1, W, rows=len(reqs)
         )
-        with self.tracer.jax_annotation("verify_step"):
-            vlogits, self.pools = self._verify(
-                self.params, self.pools, bts_j, jnp.asarray(vtoks),
-                jnp.asarray(vpos), jnp.asarray(vmask),
-            )
-        vlogits = np.asarray(vlogits)  # [slots, K+1, V]
+        if self.spec_impl != "fused":
+            vtoks = np.zeros((B, K + 1), np.int32)
+            vpos = np.zeros((B,), np.int32)
+            vmask = np.zeros((B, K + 1), bool)
+            for req in reqs:
+                s, kr = req.slot, ks[req.rid]
+                vtoks[s, 0] = req.generated[-1]
+                vtoks[s, 1 : kr + 1] = draft[req.rid]
+                vpos[s] = base[req.rid]
+                vmask[s, : kr + 1] = True
+            with self.tracer.jax_annotation("verify_step"):
+                vlogits, self.pools = self._verify(
+                    self.params, self.pools, bts_j, jnp.asarray(vtoks),
+                    jnp.asarray(vpos), jnp.asarray(vmask),
+                )
+            vlogits = np.asarray(vlogits)  # [slots, K+1, V]
 
         # commit accepted tokens through the vanilla callbacks.  The
         # round telemetry fires *before* the commits: the last commit
@@ -652,6 +824,10 @@ class PagedServer:
                 self.sched.metrics.on_spec_round(
                     req.rid, drafted=kr, accepted=n_acc, committed=n_commit
                 )
+                if self.sched.spec_ctl is not None:
+                    # the same acceptance numbers the telemetry records
+                    # drive next round's draft length for this request
+                    self.sched.spec_ctl.observe(req.rid, kr, n_acc)
             for tok in committed:
                 if req.done:
                     break
