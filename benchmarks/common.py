@@ -89,6 +89,34 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 _ROWS: List[Dict[str, Any]] = []
 _EXTRA: Dict[str, Any] = {}
 
+#: serving-shape defaults behind the per-request pool-byte figure in
+#: every BENCH header (tinylm serving path: page_size x pages covering
+#: max_len tokens)
+_HEADER_PAGE_SIZE = 16
+_HEADER_MAX_LEN = 128
+_HEADER: Dict[str, Any] = {}
+
+
+def _default_header() -> Dict[str, Any]:
+    from repro.kernels import kv_quant
+
+    cfg = get_config("tinylm")
+    pages = _HEADER_MAX_LEN // _HEADER_PAGE_SIZE
+    return {
+        "kv_dtype": "fp32",
+        "pool_bytes_per_request": cfg.num_layers * pages * kv_quant.page_bytes(
+            _HEADER_PAGE_SIZE, cfg.num_kv_heads, cfg.head_dim,
+            "fp32", cfg.dtype,
+        ),
+    }
+
+
+def set_bench_header(**kw) -> None:
+    """Override header fields persisted with the current benchmark's
+    JSON (e.g. ``kv_dtype``/``pool_bytes_per_request`` for a quantized
+    sweep).  Cleared by ``drain_results`` with the rows."""
+    _HEADER.update(kw)
+
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
@@ -112,10 +140,32 @@ def drain_results() -> Tuple[List[Dict[str, Any]], Dict[str, Any]]:
 
 def write_bench_json(bench: str, rows: List[Dict[str, Any]],
                      extra: Dict[str, Any], out_dir: Path) -> Path:
-    """Persist one benchmark's results as ``BENCH_<bench>.json``."""
+    """Persist one benchmark's results as ``BENCH_<bench>.json``.
+
+    Every file carries a ``header`` with the KV-pool configuration the
+    numbers were measured under (``kv_dtype`` + pool bytes/request) so
+    EXPERIMENTS.md trajectory comparisons across PRs never silently mix
+    pool dtypes.  ``set_bench_header`` overrides; the header resets
+    after each write.
+    """
+    global _HEADER
     out_dir.mkdir(parents=True, exist_ok=True)
     path = out_dir / f"BENCH_{bench}.json"
-    payload = {"bench": bench, "rows": rows}
+    header = _default_header()
+    if "kv_dtype" in _HEADER and "pool_bytes_per_request" not in _HEADER:
+        from repro.kernels import kv_quant
+
+        cfg = get_config("tinylm")
+        pages = _HEADER_MAX_LEN // _HEADER_PAGE_SIZE
+        header["pool_bytes_per_request"] = (
+            cfg.num_layers * pages * kv_quant.page_bytes(
+                _HEADER_PAGE_SIZE, cfg.num_kv_heads, cfg.head_dim,
+                _HEADER["kv_dtype"], cfg.dtype,
+            )
+        )
+    header.update(_HEADER)
+    _HEADER = {}
+    payload = {"bench": bench, "header": header, "rows": rows}
     if extra:
         payload["data"] = extra
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")

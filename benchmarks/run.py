@@ -34,6 +34,7 @@ from benchmarks.common import (
     eval_sequences,
     record,
     save_trace,
+    set_bench_header,
     set_trace_dir,
     timeit,
     trained_tiny,
@@ -303,7 +304,7 @@ def bench_kernels() -> None:
 # Decode attention: fused paged-attention kernel vs gather-then-attend
 # ---------------------------------------------------------------------------
 
-def bench_decode_attn(smoke: bool = False) -> None:
+def bench_decode_attn(smoke: bool = False, kv_dtype: str = "fp32") -> None:
     """Fused paged-attention decode kernel vs the gather-then-attend
     oracle (the serving decode hot path; kernels/paged_attn.py).
 
@@ -320,25 +321,51 @@ def bench_decode_attn(smoke: bool = False) -> None:
     The derived v5e section scales the same formulas to a big assigned
     arch (yi-9b) with ``analysis/roofline.py`` HBM bandwidth, which is
     where the bytes gap becomes decode-step time.
+
+    ``kv_dtype`` selects the KV-pool storage dtype for the measured
+    ticks (kernels/kv_quant.py).  Two quantization sections ride along
+    regardless of the measured dtype:
+
+    * ``kv_dtype_sweep`` — modeled attention bytes/token and pool
+      bytes/request for every supported pool dtype, plus how many
+      concurrent requests a fixed pool-byte budget holds (int8 must
+      clear >= 1.9x fp32 on both, asserted).
+    * ``pool_capacity`` — the same capacity math scaled to yi-9b at
+      serving context (where int8 pages turn directly into batch).
+
+    When ``kv_dtype`` is quantized the run also measures the kernel's
+    max context error against the *fp32* oracle on unit-Gaussian KV
+    (asserted <= ``kv_quant.ERROR_BUDGET``) and serves the trained tiny
+    model end-to-end for a greedy token-match rate + teacher-forced
+    perplexity delta vs an fp32-pool server (asserted >=
+    ``kv_quant.TOKEN_MATCH_FLOOR``) — the CI smoke gate for the
+    documented error budget.
     """
     from repro.analysis.roofline import HBM_BW
     from repro.configs.registry import get_config
+    from repro.kernels import kv_quant
 
+    kvd = kv_quant.resolve_kv_dtype(kv_dtype)
     cfg = get_config("tinylm")
     params = decoder.init_params(cfg, jax.random.PRNGKey(0))
     B, page, ctx = 4, 16, 40
     widths = (4, 8) if smoke else (4, 8, 16)
     iters = 2 if smoke else 3
 
-    def kv_bytes_per_tok(c, KV, hd, itemsize, n_layers):
-        return 2 * KV * hd * itemsize * c * n_layers
-
     KV, hd = cfg.num_kv_heads, cfg.head_dim
-    isz = np.dtype(cfg.dtype).itemsize
+
+    def kv_bytes_per_tok(c, KV, hd, n_layers, dtype, model_dtype):
+        # pages are read whole: data bytes at the pool itemsize plus
+        # the per-page scale rows for quantized dtypes
+        pages = -(-c // page)
+        return pages * kv_quant.page_bytes(page, KV, hd, dtype,
+                                           model_dtype) * n_layers
+
+    set_bench_header(kv_dtype=kvd)
     need = -(-(ctx + 1) // page)
     tiny = {}
     for W in widths:
-        pools = decoder.init_paged_pools(cfg, B * W + 2, page)
+        pools = decoder.init_paged_pools(cfg, B * W + 2, page, kvd)
         bts = np.full((B, W), -1, np.int32)
         for b in range(B):
             bts[b, :need] = np.arange(b * need, (b + 1) * need)
@@ -350,16 +377,16 @@ def bench_decode_attn(smoke: bool = False) -> None:
             step = jax.jit(lambda pr, po, bt, tk, ps, mk, _b=backend:
                            decoder.decode_step_paged(
                                pr, cfg, po, bt, tk, ps, write_mask=mk,
-                               backend=_b))
+                               backend=_b, kv_dtype=kvd))
             us = timeit(lambda: step(params, pools, jnp.asarray(bts),
                                      toks, pos, mask),
                         warmup=1, iters=iters)
-            pages_read = B * W if backend == "gather" else B * need
-            bpt = kv_bytes_per_tok(pages_read * page // B, KV, hd, isz,
-                                   cfg.num_layers)
+            pages_read = W if backend == "gather" else need
+            bpt = kv_bytes_per_tok(pages_read * page, KV, hd,
+                                   cfg.num_layers, kvd, cfg.dtype)
             row[backend] = {"us_per_call": us, "model_bytes_per_token": bpt}
             emit(f"decode_attn_{backend}_W{W}", us,
-                 f"B={B} ctx={ctx} max_len={W * page} "
+                 f"B={B} ctx={ctx} max_len={W * page} kv_dtype={kvd} "
                  f"bytes_per_token={bpt:.0f} (interpret-mode wall time)")
         tiny[f"W{W}"] = row
 
@@ -369,10 +396,10 @@ def bench_decode_attn(smoke: bool = False) -> None:
     for max_len in (256, 1024, 4096):
         c_pages = -(-(ctx + 1) // page) * page
         sweep[str(max_len)] = {
-            "oracle": kv_bytes_per_tok(max_len, KV, hd, isz,
-                                       cfg.num_layers),
-            "fused": kv_bytes_per_tok(c_pages, KV, hd, isz,
-                                      cfg.num_layers),
+            "oracle": kv_bytes_per_tok(max_len, KV, hd, cfg.num_layers,
+                                       kvd, cfg.dtype),
+            "fused": kv_bytes_per_tok(c_pages, KV, hd, cfg.num_layers,
+                                      kvd, cfg.dtype),
         }
     fused_vals = {v["fused"] for v in sweep.values()}
     flat = len(fused_vals) == 1
@@ -380,13 +407,86 @@ def bench_decode_attn(smoke: bool = False) -> None:
          f"fused={sorted(fused_vals)} oracle="
          f"{[v['oracle'] for v in sweep.values()]} flat={flat}")
 
-    # derived v5e decode-step attention-read time for a big arch
+    # -- kv_dtype sweep: pool bytes vs capacity at a fixed budget ----------
+    # pool bytes one tinylm request pins (max_len tokens of pages) and
+    # how many requests a fixed fp32-sized budget holds per dtype
+    max_len_req = 128
+    req_pages = max_len_req // page
+    dtypes = [d for d in kv_quant.KV_DTYPES
+              if d != "fp8" or hasattr(jnp, "float8_e4m3fn")]
+    per_req = {
+        d: cfg.num_layers * req_pages * kv_quant.page_bytes(
+            page, KV, hd, d, cfg.dtype)
+        for d in dtypes
+    }
+    pool_budget = 32 * per_req["fp32"]  # 32 fp32 requests' worth of pool
+    kv_sweep = {}
+    for d in dtypes:
+        bpt = kv_bytes_per_tok(ctx + 1, KV, hd, cfg.num_layers, d,
+                               cfg.dtype)
+        cap = pool_budget // per_req[d]
+        kv_sweep[d] = {
+            "attn_bytes_per_token": bpt,
+            "pool_bytes_per_request": per_req[d],
+            "max_concurrent_at_budget": int(cap),
+            "bytes_per_token_vs_fp32": kv_sweep.get("fp32", {}).get(
+                "attn_bytes_per_token", bpt) / bpt,
+            "capacity_vs_fp32": cap / max(
+                kv_sweep.get("fp32", {}).get(
+                    "max_concurrent_at_budget", cap), 1),
+        }
+        emit(f"decode_attn_kv_{d}", 0.0,
+             f"bytes_per_token={bpt} pool_bytes_per_request={per_req[d]} "
+             f"max_concurrent@{pool_budget}B={int(cap)} "
+             f"({kv_sweep[d]['bytes_per_token_vs_fp32']:.2f}x fewer "
+             f"bytes/token vs fp32)")
+    assert kv_sweep["int8"]["bytes_per_token_vs_fp32"] >= 1.9, kv_sweep
+    assert kv_sweep["int8"]["capacity_vs_fp32"] >= 1.9, kv_sweep
+
+    # -- pool_capacity: the same math at yi-9b serving scale ---------------
     acfg = get_config("yi-9b")
     aKV, ahd, alayers = acfg.num_kv_heads, acfg.head_dim, acfg.num_layers
+    a_max_len, a_budget = 32768, 8 << 30  # 8 GiB of HBM left for KV
+    a_pages = a_max_len // page
+    pool_capacity = {"budget_bytes": a_budget, "max_len": a_max_len,
+                     "arch": "yi-9b", "per_dtype": {}}
+    for d in dtypes:
+        pr = alayers * a_pages * kv_quant.page_bytes(page, aKV, ahd, d,
+                                                     "bfloat16")
+        pool_capacity["per_dtype"][d] = {
+            "pool_bytes_per_request": pr,
+            "max_concurrent_requests": int(a_budget // pr),
+        }
+    cap8 = pool_capacity["per_dtype"]["int8"]["max_concurrent_requests"]
+    cap32 = pool_capacity["per_dtype"]["fp32"]["max_concurrent_requests"]
+    emit("decode_attn_pool_capacity_yi9b", 0.0,
+         f"budget=8GiB max_len={a_max_len} fp32={cap32}req "
+         f"int8={cap8}req ({cap8 / max(cap32, 1):.1f}x)")
+
+    # -- quantized-dtype quality gates (CI smoke for the error budget) -----
+    quality = None
+    if kv_quant.is_quantized(kvd):
+        err = _kernel_error_vs_fp32_oracle(cfg, kvd)
+        match, ppl_fp32, ppl_q = _trained_tiny_kv_quality(kvd, smoke)
+        quality = {
+            "kernel_max_ctx_error_vs_fp32": err,
+            "error_budget": kv_quant.ERROR_BUDGET[kvd],
+            "token_match_rate": match,
+            "token_match_floor": kv_quant.TOKEN_MATCH_FLOOR[kvd],
+            "ppl_fp32": ppl_fp32, "ppl_quantized": ppl_q,
+            "ppl_delta": ppl_q - ppl_fp32,
+        }
+        emit(f"decode_attn_quality_{kvd}", 0.0,
+             f"max_ctx_err={err:.4f} (budget "
+             f"{kv_quant.ERROR_BUDGET[kvd]}) token_match={match:.3f} "
+             f"(floor {kv_quant.TOKEN_MATCH_FLOOR[kvd]}) "
+             f"ppl_delta={ppl_q - ppl_fp32:+.4f}")
+
+    # derived v5e decode-step attention-read time for a big arch
     v5e = {}
     for live_ctx, max_len in ((2048, 32768), (8192, 32768)):
-        ob = kv_bytes_per_tok(max_len, aKV, ahd, 2, alayers)  # bf16 KV
-        fb = kv_bytes_per_tok(live_ctx, aKV, ahd, 2, alayers)
+        ob = kv_bytes_per_tok(max_len, aKV, ahd, alayers, kvd, "bfloat16")
+        fb = kv_bytes_per_tok(live_ctx, aKV, ahd, alayers, kvd, "bfloat16")
         v5e[f"ctx{live_ctx}_max{max_len}"] = {
             "oracle_bytes_per_token": ob,
             "fused_bytes_per_token": fb,
@@ -396,13 +496,106 @@ def bench_decode_attn(smoke: bool = False) -> None:
         emit(f"decode_attn_v5e_yi9b_ctx{live_ctx}", fb / HBM_BW * 1e6,
              f"oracle_us={ob / HBM_BW * 1e6:.1f} "
              f"speedup={ob / fb:.1f}x (per decode step, attn KV reads, "
-             f"max_len={max_len})")
+             f"max_len={max_len}, kv_dtype={kvd})")
     record("smoke", bool(smoke))
+    record("kv_dtype", kvd)
     record("tiny", tiny)
     record("bytes_per_token_by_max_len", sweep)
     record("fused_flat_in_max_len", bool(flat))
+    record("kv_dtype_sweep", kv_sweep)
+    record("pool_capacity", pool_capacity)
+    if quality is not None:
+        record("quantized_quality", quality)
     record("v5e_derived", v5e)
     assert flat, "fused bytes/token must not depend on max_len"
+    if quality is not None:
+        assert quality["kernel_max_ctx_error_vs_fp32"] <= \
+            quality["error_budget"], quality
+        assert quality["token_match_rate"] >= \
+            quality["token_match_floor"], quality
+
+
+def _kernel_error_vs_fp32_oracle(cfg, kvd: str) -> float:
+    """Max |ctx| error of the fused kernel on ``kvd`` pools vs the fp32
+    oracle, over a few unit-Gaussian decode ticks (the documented
+    ERROR_BUDGET setting)."""
+    from repro.kernels import kv_quant, ops
+
+    rng = np.random.default_rng(11)
+    B, S, page, P, W = 2, 1, 16, 8, 3
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    H = cfg.num_heads
+    bt = jnp.asarray([[0, 1, 2], [3, 4, 5]], jnp.int32)
+    wm = jnp.ones((B, S), bool)
+    gp = jnp.arange(P + 1).repeat(page)
+    off = jnp.tile(jnp.arange(page), P + 1)
+    worst = 0.0
+    for trial in range(3):
+        q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+        kn = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+        vn = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+        pkf = jnp.asarray(rng.normal(size=(P + 1, page, KV, hd)),
+                          jnp.float32)
+        pvf = jnp.asarray(rng.normal(size=(P + 1, page, KV, hd)),
+                          jnp.float32)
+        pos = jnp.asarray(rng.integers(page, page * 2, size=(B,)),
+                          jnp.int32)
+        ctx_f = ops.paged_attn_ref(q, kn, vn, pkf, pvf, bt, pos, wm)[0]
+        z = jnp.zeros((P + 1, page, KV, hd),
+                      kv_quant.pool_jnp_dtype(kvd, cfg.dtype))
+        s0 = jnp.zeros((P + 1, 1, KV, 1), jnp.float32)
+        pkq, sk = kv_quant.quantize_scatter_ref(
+            z, s0, gp, off, pkf.reshape(-1, KV, hd), kvd)
+        pvq, sv = kv_quant.quantize_scatter_ref(
+            z, s0, gp, off, pvf.reshape(-1, KV, hd), kvd)
+        ctx_q = ops.paged_attention(q, kn, vn, pkq, pvq, bt, pos, wm,
+                                    scale_k=sk, scale_v=sv,
+                                    kv_dtype=kvd)[0]
+        worst = max(worst, float(jnp.max(jnp.abs(ctx_q - ctx_f))))
+    return worst
+
+
+def _trained_tiny_kv_quality(kvd: str, smoke: bool):
+    """Serve the trained tiny model with ``kvd`` pools vs fp32 pools:
+    greedy token-match rate across the drained requests, plus the
+    teacher-forced perplexity of each server's generations under the
+    fp32 model (quality delta attributable to quantized KV)."""
+    from repro.core import evaluate
+    from repro.data.pipeline import SyntheticCorpus
+    from repro.serving.server import PagedServer
+
+    cfg, params = trained_tiny(steps=120 if smoke else 500)
+    corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
+    n_req = 4 if smoke else 8
+    max_new = 12 if smoke else 24
+    rng = np.random.default_rng(31)
+    prompts = [corpus.sample(int(rng.integers(24, 64)), seed=9100 + i)
+               for i in range(n_req)]
+    outs = {}
+    for mode in ("fp32", kvd):
+        srv = PagedServer(cfg, params, gcfg=None, page_size=16,
+                          num_pages=96, n_slots=4, prefill_chunk=32,
+                          max_len=128, kv_dtype=mode)
+        for i, p in enumerate(prompts):
+            srv.submit(p, max_new=max_new, rid=i)
+        outs[mode] = srv.drain()
+    matched = total = 0
+    ppl = {}
+    for mode in ("fp32", kvd):
+        nll = cnt = 0
+        for i in range(n_req):
+            seq = np.concatenate([prompts[i], np.asarray(outs[mode][i])])
+            P = len(prompts[i])
+            ppl_i = evaluate.generation_ppl(
+                params, cfg, jnp.asarray(seq[None]), P, "full")
+            nll += np.log(ppl_i) * (len(seq) - P)
+            cnt += len(seq) - P
+        ppl[mode] = float(np.exp(nll / max(cnt, 1)))
+    for i in range(n_req):
+        a, b = outs["fp32"][i], outs[kvd][i]
+        matched += sum(x == y for x, y in zip(a, b))
+        total += max(len(a), len(b))
+    return matched / max(total, 1), ppl["fp32"], ppl[kvd]
 
 
 # ---------------------------------------------------------------------------
@@ -1211,6 +1404,11 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(BENCHES))
     ap.add_argument("--smoke", action="store_true",
                     help="reduced shapes/trace for CI smoke runs")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8", "fp8"],
+                    help="KV-pool storage dtype for benches that take "
+                         "one (decode_attn); quantized dtypes also run "
+                         "the error-budget + token-match quality gates")
     ap.add_argument("--out-dir", default=".",
                     help="directory for the BENCH_<name>.json artifacts")
     ap.add_argument("--trace-dir", default=None,
@@ -1225,10 +1423,13 @@ def main() -> None:
     for name in names:
         fn = BENCHES[name]
         try:
-            if "smoke" in inspect.signature(fn).parameters:
-                fn(smoke=args.smoke)
-            else:
-                fn()
+            kw = {}
+            sig = inspect.signature(fn).parameters
+            if "smoke" in sig:
+                kw["smoke"] = args.smoke
+            if "kv_dtype" in sig:
+                kw["kv_dtype"] = args.kv_dtype
+            fn(**kw)
         finally:
             # persist whatever was emitted even when the bench raises
             # (e.g. the speculative parity assertion): the artifact is

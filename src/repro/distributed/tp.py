@@ -113,8 +113,14 @@ class PagedTP:
     """
 
     def __init__(self, cfg, mesh: Mesh, *, axis: str = "model",
-                 backend: str = "gather"):
+                 backend: str = "gather", kv_dtype: str = "fp32"):
         self.cfg, self.mesh, self.axis, self.backend = cfg, mesh, axis, backend
+        # quantized pools shard transparently: the scale pools carry the
+        # same ("pages", None, "kv_heads", None) axes as the data, so
+        # each shard holds its heads' scales (per-shard scale bytes 1/N)
+        # and the per-shard step runs the identical quantize program on
+        # its local head slice
+        self.kv_dtype = kv_dtype
         if axis not in mesh.axis_names:
             raise ValueError(f"mesh {mesh.axis_names} has no {axis!r} axis")
         n = mesh_axis_size(mesh, axis)
@@ -155,7 +161,8 @@ class PagedTP:
     def pool_pspecs(self, num_pages: int, page_size: int) -> Any:
         return tree_map_specs(
             lambda s: shlib.spec_for(s.axes, self.rules, self.mesh, s.shape),
-            decoder.paged_pool_specs(self.cfg, num_pages, page_size),
+            decoder.paged_pool_specs(self.cfg, num_pages, page_size,
+                                     self.kv_dtype),
         )
 
     def pruned_pspecs(self, pruned: Any) -> Any:
@@ -219,13 +226,14 @@ class PagedTP:
         key = ("prefill", collect, self._pruned_key(pruned))
         if key not in self._steps:
             cfg_l, axis, backend = self.cfg_local, self.axis, self.backend
+            kv_dtype = self.kv_dtype
 
             def local(params, pools, bt, tokens, pos, mask, pr):
                 with shlib.tp_axis(axis):
                     logits, new_pools, stats = decoder.decode_step_paged(
                         params, cfg_l, pools, bt, tokens, pos,
                         write_mask=mask, pruned=pr, collect_stats=collect,
-                        backend=backend,
+                        backend=backend, kv_dtype=kv_dtype,
                     )
                 return logits, new_pools, gather_stats(stats, axis)
 
@@ -242,12 +250,14 @@ class PagedTP:
         key = ("decode", self._pruned_key(pruned))
         if key not in self._steps:
             cfg_l, axis, backend = self.cfg_local, self.axis, self.backend
+            kv_dtype = self.kv_dtype
 
             def local(params, pools, bts, toks, pos, mask, pr):
                 with shlib.tp_axis(axis):
                     logits, new_pools, _ = decoder.decode_step_paged(
                         params, cfg_l, pools, bts, toks, pos,
                         write_mask=mask, pruned=pr, backend=backend,
+                        kv_dtype=kv_dtype,
                     )
                 return logits, new_pools
 
@@ -275,13 +285,14 @@ class PagedTP:
         key = ("draft_verify", self._pruned_key(pruned), num_steps, spec_k)
         if key not in self._steps:
             cfg_l, axis, backend = self.cfg_local, self.axis, self.backend
+            kv_dtype = self.kv_dtype
 
             def local(params, pools, bts, toks, pos, ks, live, pr):
                 with shlib.tp_axis(axis):
                     drafts, vlogits, new_pools = decoder.draft_verify_paged(
                         params, cfg_l, pools, bts, toks, pos, ks, live,
                         pruned=pr, num_steps=num_steps, spec_k=spec_k,
-                        backend=backend,
+                        backend=backend, kv_dtype=kv_dtype,
                     )
                 return drafts, vlogits, new_pools
 
@@ -305,13 +316,14 @@ class PagedTP:
         key = ("probe",)
         if key not in self._steps:
             cfg_l, axis, backend = self.cfg_local, self.axis, self.backend
+            kv_dtype = self.kv_dtype
 
             def local(params, pools, bts, toks, pos, mask):
                 with shlib.tp_axis(axis):
                     _, _, stats = decoder.decode_step_paged(
                         params, cfg_l, pools, bts, toks, pos,
                         write_mask=mask, pruned=None, collect_stats=True,
-                        backend=backend,
+                        backend=backend, kv_dtype=kv_dtype,
                     )
                 return gather_stats(stats, axis)
 
@@ -327,12 +339,13 @@ class PagedTP:
         key = ("verify",)
         if key not in self._steps:
             cfg_l, axis, backend = self.cfg_local, self.axis, self.backend
+            kv_dtype = self.kv_dtype
 
             def local(params, pools, bts, toks, pos, mask):
                 with shlib.tp_axis(axis):
                     return decoder.verify_step_paged(
                         params, cfg_l, pools, bts, toks, pos, mask,
-                        backend=backend,
+                        backend=backend, kv_dtype=kv_dtype,
                     )
 
             self._steps[key] = self._wrap(

@@ -58,13 +58,18 @@ def paged_kv_gather(pool, block_tables):
 
 
 def paged_attention(q, k_new, v_new, pool_k, pool_v, block_tables, pos,
-                    write_mask, *, window: int = 0):
+                    write_mask, *, scale_k=None, scale_v=None,
+                    kv_dtype: str = "fp32", window: int = 0):
     """Fused paged-attention decode step (see kernels/paged_attn.py):
     in-kernel K/V scatter + online-softmax attention streaming only the
     pages each request owns.  Returns (ctx [B,S,H,hd] fp32, new_pool_k,
-    new_pool_v); pools are updated in place (input/output aliased)."""
+    new_pool_v) — for quantized ``kv_dtype`` (int8/fp8) the page-scale
+    pools go in and come back too, appended as (new_scale_k,
+    new_scale_v).  Pools and scale pools are updated in place
+    (input/output aliased)."""
     return _paged_attn(
         q, k_new, v_new, pool_k, pool_v, block_tables, pos, write_mask,
+        scale_k=scale_k, scale_v=scale_v, kv_dtype=kv_dtype,
         window=window,
     )
 

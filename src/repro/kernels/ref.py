@@ -69,12 +69,27 @@ def paged_attn_ref(
     pos: jax.Array,          # [B] int32
     write_mask: jax.Array,   # [B, S] bool
     window: int = 0,
+    *,
+    scale_k: jax.Array = None,  # [P+1, 1, KV, 1] fp32 (quantized pools)
+    scale_v: jax.Array = None,
+    kv_dtype: str = "fp32",
 ):
     """Gather-then-attend oracle for the fused ``paged_attn`` kernel:
     scatter new K/V (masked slots -> trash page), materialize the full
     per-request page view, masked softmax over every position.  The
     same math as ``attention.paged_attn_step``'s fallback path.
-    Returns (ctx [B,S,H,hd] fp32, new_pool_k, new_pool_v)."""
+
+    Quantization-aware: for ``kv_dtype`` int8/fp8 the scatter runs the
+    page-boundary quantization program from ``kernels/kv_quant.py``
+    (monotone per-page-per-head absmax scales, old rows re-encoded
+    under grown scales) and attention reads ``bits * scale`` in fp32 —
+    the identical float ops as the fused kernel, so pool bits and
+    scales match it exactly.
+
+    Returns (ctx [B,S,H,hd] fp32, new_pool_k, new_pool_v) and, when
+    quantized, appends (new_scale_k, new_scale_v)."""
+    from repro.kernels import kv_quant
+
     NEG_INF = -2.0e38
     B, S, H, hd = q.shape
     KV = k_new.shape[2]
@@ -82,6 +97,7 @@ def paged_attn_ref(
     page = pool_k.shape[1]
     trash = pool_k.shape[0] - 1
     W = block_tables.shape[1]
+    quantized = kv_quant.is_quantized(kv_dtype)
     positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
     logical_page = positions // page
     offset = positions % page
@@ -90,12 +106,21 @@ def paged_attn_ref(
     )
     ok = write_mask & (gp >= 0) & (logical_page < W)
     gp = jnp.where(ok, gp, trash)
-    new_k = pool_k.at[gp.reshape(-1), offset.reshape(-1)].set(
-        k_new.reshape(B * S, KV, hd)
-    )
-    new_v = pool_v.at[gp.reshape(-1), offset.reshape(-1)].set(
-        v_new.reshape(B * S, KV, hd)
-    )
+    gpf, off = gp.reshape(-1), offset.reshape(-1)
+    if quantized:
+        new_k, new_sk = kv_quant.quantize_scatter_ref(
+            pool_k, scale_k, gpf, off, k_new.reshape(B * S, KV, hd), kv_dtype
+        )
+        new_v, new_sv = kv_quant.quantize_scatter_ref(
+            pool_v, scale_v, gpf, off, v_new.reshape(B * S, KV, hd), kv_dtype
+        )
+    else:
+        new_k = pool_k.at[gpf, off].set(
+            k_new.reshape(B * S, KV, hd).astype(pool_k.dtype)
+        )
+        new_v = pool_v.at[gpf, off].set(
+            v_new.reshape(B * S, KV, hd).astype(pool_v.dtype)
+        )
     k_cache = paged_gather_ref(
         new_k.reshape(pool_k.shape[0], page, KV * hd),
         block_tables,
@@ -104,6 +129,18 @@ def paged_attn_ref(
         new_v.reshape(pool_v.shape[0], page, KV * hd),
         block_tables,
     ).reshape(B, W * page, KV, hd)
+    if quantized:
+        k_cache = kv_quant.dequantize(
+            k_cache, kv_quant.gather_scales(new_sk, block_tables, page)
+        )
+        v_cache = kv_quant.dequantize(
+            v_cache, kv_quant.gather_scales(new_sv, block_tables, page)
+        )
+    else:
+        # attention math always in fp32 (no-op for fp32 pools; bf16
+        # pools round on write, upcast on read — same as the kernel)
+        k_cache = k_cache.astype(jnp.float32)
+        v_cache = v_cache.astype(jnp.float32)
     C = W * page
     scale = 1.0 / (hd ** 0.5)
     qg = q.reshape(B, S, KV, G, hd)
@@ -120,4 +157,7 @@ def paged_attn_ref(
     probs = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v_cache.dtype),
                      v_cache)
-    return (ctx.reshape(B, S, H, hd).astype(jnp.float32), new_k, new_v)
+    ctx = ctx.reshape(B, S, H, hd).astype(jnp.float32)
+    if quantized:
+        return (ctx, new_k, new_v, new_sk, new_sv)
+    return (ctx, new_k, new_v)

@@ -91,6 +91,14 @@ def main() -> None:
                          "then-attend oracle, or auto (fused on TPU, "
                          "gather elsewhere); output is token-identical "
                          "either way")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=["fp32", "bf16", "int8", "fp8"],
+                    help="paged KV-pool storage dtype: fp32 inherits the "
+                         "model dtype (token-identical baseline); bf16 "
+                         "halves pool bytes; int8/fp8 quantize pages "
+                         "with per-page-per-head scales dequantized "
+                         "inside the attention kernel (see DESIGN.md "
+                         "§15 for the error budget)")
     ap.add_argument("--mesh", type=parse_mesh, default=None,
                     metavar="AXIS=N",
                     help="run the paged server tensor-parallel over an "
@@ -203,7 +211,8 @@ def main() -> None:
             spec_k=args.spec_k, spec_impl=args.spec_impl,
             adaptive_spec=not args.no_adaptive_spec,
             prefix_cache=not args.no_prefix_cache,
-            kernel_backend=args.kernel_backend, mesh=mesh,
+            kernel_backend=args.kernel_backend,
+            kv_dtype=args.kv_dtype, mesh=mesh,
             tp_axis=args.mesh[0] if args.mesh else "model",
             tracer=tracer, flocking_every=args.flocking_telemetry,
         )

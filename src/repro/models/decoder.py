@@ -643,32 +643,40 @@ def supports_paged(cfg) -> bool:
     )
 
 
-def paged_pool_specs(cfg, num_pages: int, page_size: int) -> Dict:
+def paged_pool_specs(cfg, num_pages: int, page_size: int,
+                     kv_dtype: str = "fp32") -> Dict:
     """Per-layer KV page pools, mirroring the segment structure (scan
     segments stack pools on the leading layer axis like every other
-    per-layer buffer)."""
+    per-layer buffer).  Quantized ``kv_dtype`` adds the per-layer scale
+    pools as sibling leaves (``attention.paged_cache_specs``), so COW
+    copies, donation, and TP sharding carry them automatically."""
     assert supports_paged(cfg), cfg.name
     tree: Dict[str, Any] = {}
     for i, seg in enumerate(build_plan(cfg)):
         if seg.kind == "scan":
             tree[f"seg{i}"] = {
                 f"pos{j}": param_lib.stack_specs(
-                    attn_lib.paged_cache_specs(cfg, num_pages, page_size), seg.n
+                    attn_lib.paged_cache_specs(
+                        cfg, num_pages, page_size, kv_dtype
+                    ), seg.n
                 )
                 for j, d in enumerate(seg.descs)
             }
         else:
             tree[f"seg{i}"] = {
-                f"layer{j}": attn_lib.paged_cache_specs(cfg, num_pages, page_size)
+                f"layer{j}": attn_lib.paged_cache_specs(
+                    cfg, num_pages, page_size, kv_dtype
+                )
                 for j, d in enumerate(seg.descs)
             }
     return tree
 
 
-def init_paged_pools(cfg, num_pages: int, page_size: int) -> Dict:
+def init_paged_pools(cfg, num_pages: int, page_size: int,
+                     kv_dtype: str = "fp32") -> Dict:
     return param_lib.init_params(
-        paged_pool_specs(cfg, num_pages, page_size), jax.random.PRNGKey(0),
-        cfg.dtype,
+        paged_pool_specs(cfg, num_pages, page_size, kv_dtype),
+        jax.random.PRNGKey(0), cfg.dtype,
     )
 
 
@@ -714,11 +722,12 @@ def _apply_layer_paged(
     pruned_ffn: Optional[Dict],
     collect_stats: bool,
     backend: str = "gather",
+    kv_dtype: str = "fp32",
 ):
     h = apply_norm(lp["mixer_norm"], x, cfg)
     y, new_pool = attn_lib.paged_attn_step(
         lp["mixer"], pool, block_tables, h, pos, write_mask, cfg,
-        kind=desc.attn_kind, backend=backend,
+        kind=desc.attn_kind, backend=backend, kv_dtype=kv_dtype,
     )
     x = x + y
 
@@ -768,6 +777,7 @@ def decode_step_paged(
     pruned: Optional[Dict] = None,  # per-slot compacted FF tree
     collect_stats: bool = False,
     backend: str = "gather",
+    kv_dtype: str = "fp32",
 ) -> Tuple[jax.Array, Dict, Optional[Dict]]:
     """Batched paged step with per-request positions.
 
@@ -777,8 +787,10 @@ def decode_step_paged(
     ``backend`` picks the attention path per
     ``attention.resolve_attn_backend``: the fused paged-attention
     kernel or the gather-then-attend oracle (default, bit-exact vs the
-    contiguous path at fp32).  Returns (logits [B,S,V], new pools,
-    stats tree or None).
+    contiguous path at fp32).  ``kv_dtype`` must match how ``pools``
+    was built (``init_paged_pools``) — int8/fp8 pools carry scale
+    leaves that both backends update in lockstep with the pages.
+    Returns (logits [B,S,V], new pools, stats tree or None).
     """
     B, S = token.shape
     if write_mask is None:
@@ -799,7 +811,7 @@ def decode_step_paged(
                 x, npool, st = _apply_layer_paged(
                     sp[f"layer{j}"], desc, seg_pool[f"layer{j}"], x,
                     block_tables, pos, write_mask, cfg, pf, collect_stats,
-                    backend,
+                    backend, kv_dtype,
                 )
                 np_seg[f"layer{j}"] = npool
                 if collect_stats:
@@ -816,7 +828,7 @@ def decode_step_paged(
                     x_c, npool, st = _apply_layer_paged(
                         lp_all[f"pos{j}"], desc, pool_all[f"pos{j}"], x_c,
                         block_tables, pos, write_mask, cfg, pf, collect_stats,
-                        backend,
+                        backend, kv_dtype,
                     )
                     np_out[f"pos{j}"] = npool
                     st_out[f"pos{j}"] = st if collect_stats else jnp.zeros(())
@@ -845,6 +857,7 @@ def draft_loop_paged(
     *,
     num_steps: int,
     backend: str = "gather",
+    kv_dtype: str = "fp32",
 ) -> Tuple[jax.Array, Dict]:
     """Fused k-token self-speculative draft loop: one device program.
 
@@ -878,6 +891,7 @@ def draft_loop_paged(
         logits, pl, _ = decode_step_paged(
             params, cfg, pl, block_tables, tok, pos + i,
             write_mask=live[:, None], pruned=pruned, backend=backend,
+            kv_dtype=kv_dtype,
         )
         nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
         tok = jnp.where(live[:, None], nxt[:, None], tok)
@@ -898,6 +912,7 @@ def verify_step_paged(
     pos: jax.Array,  # [B] int32 committed KV length per request
     write_mask: jax.Array,  # [B, k+1] bool
     backend: str = "gather",
+    kv_dtype: str = "fp32",
 ) -> Tuple[jax.Array, Dict]:
     """Multi-token dense verify step for self-speculative decoding.
 
@@ -920,7 +935,7 @@ def verify_step_paged(
     logits, pools, _ = decode_step_paged(
         params, cfg, pools, block_tables, tokens, pos,
         write_mask=write_mask, pruned=None, collect_stats=False,
-        backend=backend,
+        backend=backend, kv_dtype=kv_dtype,
     )
     return logits, pools
 
@@ -939,6 +954,7 @@ def draft_verify_paged(
     num_steps: int,
     spec_k: int,
     backend: str = "gather",
+    kv_dtype: str = "fp32",
 ) -> Tuple[jax.Array, jax.Array, Dict]:
     """Whole speculative round — draft scan *and* dense verify — as one
     device program.
@@ -965,7 +981,7 @@ def draft_verify_paged(
     """
     drafts, pools = draft_loop_paged(
         params, cfg, pools, block_tables, token, pos, k_r, pruned,
-        num_steps=num_steps, backend=backend,
+        num_steps=num_steps, backend=backend, kv_dtype=kv_dtype,
     )
     B = token.shape[0]
     cols = min(num_steps, spec_k)
@@ -976,7 +992,7 @@ def draft_verify_paged(
     vmask = row_live[:, None] & (idx <= k_r[:, None])
     vlogits, pools = verify_step_paged(
         params, cfg, pools, block_tables, vtoks, pos, vmask,
-        backend=backend,
+        backend=backend, kv_dtype=kv_dtype,
     )
     return drafts, vlogits, pools
 

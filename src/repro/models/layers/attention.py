@@ -272,14 +272,42 @@ def fill_cache(cache: Dict, k: jax.Array, v: jax.Array) -> Dict:
 # NEG_INF, which keeps the math (and, at fp32, the bits) identical.
 
 
-def paged_cache_specs(cfg, num_pages: int, page_size: int) -> Dict[str, ParamSpec]:
-    """KV page pool for one attention layer (+1 trash page)."""
+def paged_cache_specs(cfg, num_pages: int, page_size: int,
+                      kv_dtype: str = "fp32") -> Dict[str, ParamSpec]:
+    """KV page pool for one attention layer (+1 trash page).
+
+    ``kv_dtype`` (DESIGN.md section 15) picks the page byte format:
+    ``fp32`` inherits the model dtype (the pre-quantization pools),
+    ``bf16`` halves pool bytes, ``int8``/``fp8`` quarter them and add
+    parallel per-page-per-head fp32 *scale pools* (``k_scale`` /
+    ``v_scale``) addressed by the same block table.  The scale leaves
+    carry the same ``pages``/``kv_heads`` axes as the data, so COW
+    page copies (``decoder.copy_pool_pages``'s ``tree.map``), pool
+    donation, and TP ``kv_heads`` sharding all treat them as just
+    another pool leaf — only the attention kernel/oracle interprets
+    them.
+    """
+    from repro.kernels import kv_quant
+
+    kv_quant.resolve_kv_dtype(kv_dtype)
     KV, hd = cfg.num_kv_heads, cfg.head_dim
     axes = ("pages", "page", "kv_heads", "head_dim")
-    return {
-        "k": ParamSpec((num_pages + 1, page_size, KV, hd), axes, init="zeros"),
-        "v": ParamSpec((num_pages + 1, page_size, KV, hd), axes, init="zeros"),
+    dt = None if kv_dtype == "fp32" else str(
+        kv_quant.pool_jnp_dtype(kv_dtype, cfg.dtype)
+    )
+    specs = {
+        "k": ParamSpec((num_pages + 1, page_size, KV, hd), axes,
+                       init="zeros", dtype=dt),
+        "v": ParamSpec((num_pages + 1, page_size, KV, hd), axes,
+                       init="zeros", dtype=dt),
     }
+    if kv_quant.is_quantized(kv_dtype):
+        s_axes = ("pages", None, "kv_heads", None)
+        specs["k_scale"] = ParamSpec((num_pages + 1, 1, KV, 1), s_axes,
+                                     init="zeros", dtype="float32")
+        specs["v_scale"] = ParamSpec((num_pages + 1, 1, KV, 1), s_axes,
+                                     init="zeros", dtype="float32")
+    return specs
 
 
 def _gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
@@ -318,12 +346,21 @@ def paged_attn_step(
     cfg,
     kind: str = "global",
     backend: str = "gather",
+    kv_dtype: str = "fp32",
 ) -> Tuple[jax.Array, Dict]:
     """One paged step: project, scatter new KV into pages, attend.
 
     Token ``x[b, s]`` sits at absolute position ``pos[b] + s``; its K/V
     land in page ``block_tables[b, (pos[b]+s) // page]`` at offset
     ``(pos[b]+s) % page``.  Returns (y [B,S,D], updated pool).
+
+    ``kv_dtype`` must match the pool (``paged_cache_specs``): for
+    int8/fp8 the pool carries ``k_scale``/``v_scale`` leaves and both
+    backends run the page-boundary quantization program from
+    ``kernels/kv_quant.py`` — the scatter quantizes under monotone
+    per-page-per-head scales and attention reads ``bits * scale`` in
+    fp32.  Beyond this function (and the kernel/oracle it dispatches
+    to) nobody sees quantized bytes.
 
     Two backends (``resolve_attn_backend``):
 
@@ -344,9 +381,17 @@ def paged_attn_step(
     of inactive slots (no pages allocated) are garbage on both paths
     (uniform-softmax garbage vs zeros) and are never read.
     """
+    from repro.kernels import kv_quant
+
     B, S, D = x.shape
     page = pool["k"].shape[1]
     trash = pool["k"].shape[0] - 1
+    quantized = kv_quant.is_quantized(kv_dtype)
+    if quantized:
+        assert "k_scale" in pool, (
+            f"kv_dtype={kv_dtype!r} needs scale pools; build the pool "
+            "with paged_cache_specs(..., kv_dtype=...)"
+        )
     positions = pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]  # [B,S]
     q, k_new, v_new = _project_qkv(params, x, positions, cfg, use_rope=True)
 
@@ -355,12 +400,16 @@ def paged_attn_step(
 
         window = cfg.sliding_window \
             if (kind == "local" and cfg.sliding_window) else 0
-        ctx, pk, pv = ops.paged_attention(
+        out = ops.paged_attention(
             q, k_new, v_new, pool["k"], pool["v"], block_tables, pos,
-            write_mask, window=window,
+            write_mask, scale_k=pool.get("k_scale"),
+            scale_v=pool.get("v_scale"), kv_dtype=kv_dtype, window=window,
         )
-        y = _out_proj(params, ctx.astype(x.dtype), cfg)
-        return y, {"k": pk, "v": pv}
+        y = _out_proj(params, out[0].astype(x.dtype), cfg)
+        new_pool = {"k": out[1], "v": out[2]}
+        if quantized:
+            new_pool["k_scale"], new_pool["v_scale"] = out[3], out[4]
+        return y, new_pool
 
     logical_page = positions // page
     offset = positions % page
@@ -370,17 +419,43 @@ def paged_attn_step(
     ok = write_mask & (gp >= 0) & (logical_page < block_tables.shape[1])
     gp = jnp.where(ok, gp, trash)
     KV, hd = k_new.shape[2], k_new.shape[3]
-    new_pool = {
-        "k": pool["k"].at[gp.reshape(-1), offset.reshape(-1)].set(
-            k_new.reshape(B * S, KV, hd)
-        ),
-        "v": pool["v"].at[gp.reshape(-1), offset.reshape(-1)].set(
-            v_new.reshape(B * S, KV, hd)
-        ),
-    }
+    gpf, off = gp.reshape(-1), offset.reshape(-1)
+    if quantized:
+        nk, nsk = kv_quant.quantize_scatter_ref(
+            pool["k"], pool["k_scale"], gpf, off,
+            k_new.reshape(B * S, KV, hd), kv_dtype,
+        )
+        nv, nsv = kv_quant.quantize_scatter_ref(
+            pool["v"], pool["v_scale"], gpf, off,
+            v_new.reshape(B * S, KV, hd), kv_dtype,
+        )
+        new_pool = {"k": nk, "v": nv, "k_scale": nsk, "v_scale": nsv}
+    else:
+        new_pool = {
+            "k": pool["k"].at[gpf, off].set(
+                k_new.reshape(B * S, KV, hd).astype(pool["k"].dtype)
+            ),
+            "v": pool["v"].at[gpf, off].set(
+                v_new.reshape(B * S, KV, hd).astype(pool["v"].dtype)
+            ),
+        }
 
     k_cache = _gather_pages(new_pool["k"], block_tables)  # [B, C, KV, hd]
     v_cache = _gather_pages(new_pool["v"], block_tables)
+    if quantized:
+        k_cache = kv_quant.dequantize(
+            k_cache, kv_quant.gather_scales(new_pool["k_scale"],
+                                            block_tables, page)
+        )
+        v_cache = kv_quant.dequantize(
+            v_cache, kv_quant.gather_scales(new_pool["v_scale"],
+                                            block_tables, page)
+        )
+    else:
+        # attention math always in fp32 (no-op for fp32 pools; bf16
+        # pools round on write, upcast on read — matches the kernel)
+        k_cache = k_cache.astype(jnp.float32)
+        v_cache = v_cache.astype(jnp.float32)
     C = k_cache.shape[1]
 
     H = cfg.num_heads

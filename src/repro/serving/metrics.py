@@ -24,8 +24,12 @@ Attention-traffic gauge (``attn_bytes_read``): modeled HBM bytes of
 paged KV the attention path read each tick, fed by the server from the
 active kernel backend (the fused ``paged_attn`` kernel streams only
 owned pages — O(live context); the gather oracle reads every slot's
-full narrowed block-table width).  ``attn_bytes_per_token`` in
-``summary()`` is the number the ``decode_attn`` benchmark tracks.  Per-request,
+full narrowed block-table width).  Bytes are counted at the *pool's
+actual itemsize* for the server's ``kv_dtype`` — int8/fp8 pages count
+1 byte per element plus their per-page scale rows, not the model
+dtype's 4 (``kernels/kv_quant.py::page_bytes``).
+``attn_bytes_per_token`` in ``summary()`` is the number the
+``decode_attn`` benchmark tracks.  Per-request,
 ``prefix_hit_tokens`` records the matched prefix length — the warm/cold
 TTFT split in ``benchmarks/run.py --only prefix`` comes from it.
 

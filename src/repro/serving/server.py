@@ -109,6 +109,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import griffin as griffin_lib
+from repro.kernels import kv_quant
 from repro.models import decoder
 from repro.models.layers.attention import resolve_attn_backend
 from repro.obs.flocking import FlockingMonitor
@@ -144,6 +145,7 @@ class PagedServer:
         spec_prefill_cap: int = 1,
         prefix_cache: bool = True,
         kernel_backend: str = "auto",
+        kv_dtype: str = "fp32",
         metrics: Optional[ServingMetrics] = None,
         mesh=None,
         tp_axis: str = "model",
@@ -153,6 +155,11 @@ class PagedServer:
         assert decoder.supports_paged(cfg), (
             f"{cfg.name}: paged serving covers attention families only"
         )
+        # page-pool byte format (DESIGN.md section 15): fp32 = model
+        # dtype (bit-identical legacy pools), bf16 halves pool bytes,
+        # int8/fp8 quarter them behind per-page-per-head scale pools
+        # that only the attention kernel/oracle ever reads
+        self.kv_dtype = kv_quant.resolve_kv_dtype(kv_dtype)
         self.cfg, self.params = cfg, params
         # GRIFFIN selection/compaction always runs on host single-device
         # arrays (the compacted tree is per-request host state); under a
@@ -186,7 +193,8 @@ class PagedServer:
         if mesh is not None:
             from repro.distributed.tp import PagedTP
 
-            self.tp = PagedTP(cfg, mesh, axis=tp_axis, backend=self.backend)
+            self.tp = PagedTP(cfg, mesh, axis=tp_axis, backend=self.backend,
+                              kv_dtype=self.kv_dtype)
             if self.gcfg is not None and (
                 self.gcfg.tp_shards != self.tp.n
                 or not self.gcfg.per_shard_topk
@@ -205,7 +213,8 @@ class PagedServer:
         self.sched.needs_stats = self.gcfg is not None
         if spec_k and adaptive_spec:
             self.sched.spec_ctl = SpecController(spec_k)
-        self.pools = decoder.init_paged_pools(cfg, num_pages, page_size)
+        self.pools = decoder.init_paged_pools(cfg, num_pages, page_size,
+                                              self.kv_dtype)
         self.pruned_slots: Optional[Dict] = None  # per-slot compacted FF
         self._next_rid = 0
         self._tick_attn_bytes = 0.0  # modeled KV read bytes, this tick
@@ -228,6 +237,7 @@ class PagedServer:
         self._tick_no = 0
         self._probe = None
         backend = self.backend
+        kv_dtype = self.kv_dtype
 
         if self.tp is not None:
             # shard_map tensor parallelism (distributed/tp.py): pools
@@ -274,6 +284,7 @@ class PagedServer:
             return decoder.decode_step_paged(
                 params, cfg, pools, bt, tokens, pos, write_mask=mask,
                 pruned=pruned, collect_stats=collect, backend=backend,
+                kv_dtype=kv_dtype,
             )
 
         self._prefill = jax.jit(prefill, static_argnames=("collect",),
@@ -282,7 +293,7 @@ class PagedServer:
         def dec(params, pools, bts, toks, pos, mask, pruned):
             logits, pools, _ = decoder.decode_step_paged(
                 params, cfg, pools, bts, toks, pos, write_mask=mask,
-                pruned=pruned, backend=backend,
+                pruned=pruned, backend=backend, kv_dtype=kv_dtype,
             )
             return logits, pools
 
@@ -300,7 +311,7 @@ class PagedServer:
             return decoder.draft_verify_paged(
                 params, cfg, pools, bts, toks, pos, kr, live,
                 pruned=pruned, num_steps=num_steps, spec_k=spec_k_static,
-                backend=backend,
+                backend=backend, kv_dtype=kv_dtype,
             )
 
         self._draft_verify = jax.jit(draft_verify,
@@ -309,7 +320,8 @@ class PagedServer:
 
         def verify(params, pools, bts, toks, pos, mask):
             return decoder.verify_step_paged(
-                params, cfg, pools, bts, toks, pos, mask, backend=backend
+                params, cfg, pools, bts, toks, pos, mask, backend=backend,
+                kv_dtype=kv_dtype,
             )
 
         self._verify = jax.jit(verify, donate_argnums=(1,))
@@ -327,6 +339,7 @@ class PagedServer:
                 _, _, stats = decoder.decode_step_paged(
                     params, cfg, pools, bts, toks, pos, write_mask=mask,
                     pruned=None, collect_stats=True, backend=backend,
+                    kv_dtype=kv_dtype,
                 )
                 return stats
 
@@ -486,10 +499,14 @@ class PagedServer:
         attention (the ``attn_bytes_read`` per-tick gauge).  The fused
         kernel streams ``ceil((pos+S)/page)`` owned pages per live
         request; the gather oracle materializes ``width`` pages for
-        every row, live or not."""
+        every row, live or not.  Bytes come from the *pool* itemsize
+        (``kv_dtype``), not the model dtype, plus the per-page scale
+        bytes quantized pools carry (``kv_quant.page_bytes``)."""
         page = self.pcfg.page_size
-        per_page = (2 * page * self.cfg.num_kv_heads * self.cfg.head_dim
-                    * np.dtype(self.cfg.dtype).itemsize)
+        per_page = kv_quant.page_bytes(
+            page, self.cfg.num_kv_heads, self.cfg.head_dim,
+            self.kv_dtype, self.cfg.dtype,
+        )
         if self.backend == "fused":
             pages = sum(-(-(p + S) // page) for p in pos)
         else:

@@ -42,13 +42,14 @@ PROMPTS = [
 MAX_NEW = 10
 
 
-def serve(mesh, n_shards, spec_k, backend="gather", max_new=MAX_NEW):
+def serve(mesh, n_shards, spec_k, backend="gather", max_new=MAX_NEW,
+          kv_dtype="fp32"):
     gcfg = GriffinConfig(sparsity=0.5, per_shard_topk=True,
                          tp_shards=n_shards)
     srv = PagedServer(
         CFG, PARAMS, gcfg=gcfg, page_size=8, num_pages=10, n_slots=3,
         prefill_chunk=16, max_len=64, spec_k=spec_k,
-        kernel_backend=backend, mesh=mesh,
+        kernel_backend=backend, mesh=mesh, kv_dtype=kv_dtype,
     )
     for i, p in enumerate(PROMPTS):
         srv.submit(p, max_new, rid=i)
@@ -91,5 +92,23 @@ _, out_g, _ = serve(None, 2, 0, backend="gather", max_new=6)
 _, out_f, _ = serve(mesh, 2, 0, backend="fused", max_new=6)
 assert out_g == out_f, f"fused sharded diverged\n{out_g}\n{out_f}"
 print("case fused model=2: tokens identical")
+
+# quantized pools under TP: the per-(page, kv_head) scales make every
+# shard's quantization independent of the others (each computes its
+# own heads' scales exactly as the single device does), so int8
+# sharded serving must be token-identical to int8 single-device — and
+# the scale pool shards 1/N with the data it scales
+mesh = make_serving_mesh(2)
+s1, out1, _ = serve(None, 2, 0, kv_dtype="int8", max_new=6)
+s2, out2, _ = serve(mesh, 2, 0, kv_dtype="int8", max_new=6)
+assert out1 == out2, f"int8 sharded diverged\n{out1}\n{out2}"
+total8 = pool_shard_bytes(s1.pools)
+per_shard8 = pool_shard_bytes(s2.pools)
+assert per_shard8 * 2 == total8, (per_shard8, total8)
+assert total8 < pool_shard_bytes(serve(None, 2, 0, max_new=1)[0].pools), (
+    "int8 pools must be smaller than fp32 pools"
+)
+print(f"case int8 model=2: tokens identical, pool_bytes "
+      f"{total8} -> {per_shard8}/shard")
 
 print("OK sharded serving identity")

@@ -29,7 +29,8 @@ from repro.models.layers import attention as attn_lib
 from repro.serving.server import PagedServer
 
 
-def _mk_case(rng, B, S, H, KV, hd, page, W, window):
+def _mk_case(rng, B, S, H, KV, hd, page, W, window,
+             pool_dtype="float32"):
     """Random paged-attention inputs with prefix-allocated tables."""
     q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
     kn = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
@@ -37,8 +38,10 @@ def _mk_case(rng, B, S, H, KV, hd, page, W, window):
     lens = rng.integers(0, (W - 1) * page - S, size=B)
     need = [-(-(int(l) + S) // page) for l in lens]
     P = sum(need) + 2
-    pk = jnp.asarray(rng.normal(size=(P + 1, page, KV, hd)), jnp.float32)
-    pv = jnp.asarray(rng.normal(size=(P + 1, page, KV, hd)), jnp.float32)
+    pk = jnp.asarray(rng.normal(size=(P + 1, page, KV, hd)),
+                     jnp.float32).astype(pool_dtype)
+    pv = jnp.asarray(rng.normal(size=(P + 1, page, KV, hd)),
+                     jnp.float32).astype(pool_dtype)
     bt = np.full((B, W), -1, np.int32)
     perm = rng.permutation(P)
     c = 0
@@ -77,7 +80,11 @@ def test_fused_matches_oracle(B, S, H, KV, hd, page, W, window):
     np.testing.assert_array_equal(np.asarray(pv_f)[:-1], np.asarray(pv_r)[:-1])
 
 
-def test_fused_matches_oracle_fuzz():
+@pytest.mark.parametrize("pool_dtype", ["float32", "bfloat16"])
+def test_fused_matches_oracle_fuzz(pool_dtype):
+    # bf16 pools: the scatter rounds rows to bf16 identically on both
+    # paths and the attend upcasts the same stored bits to fp32, so
+    # pages stay bit-identical and ctx keeps the fp32 tolerance
     rng = np.random.default_rng(7)
     for trial in range(8):
         KV = int(rng.choice([1, 2, 3]))
@@ -86,10 +93,12 @@ def test_fused_matches_oracle_fuzz():
         page = int(rng.choice([4, 8]))
         case = _mk_case(rng, B=int(rng.integers(1, 5)), S=S, H=KV * G,
                         KV=KV, hd=8, page=page,
-                        W=int(rng.integers(3, 10)), window=0)
+                        W=int(rng.integers(3, 10)), window=0,
+                        pool_dtype=pool_dtype)
         window = int(rng.choice([0, 3, 9]))
         ctx_f, pk_f, pv_f = ops.paged_attention(*case, window=window)
         ctx_r, pk_r, pv_r = ops.paged_attn_ref(*case, window=window)
+        assert pk_f.dtype == jnp.dtype(pool_dtype)
         wm = np.asarray(case[7])
         rows = wm.any(axis=1)
         np.testing.assert_allclose(
@@ -97,7 +106,8 @@ def test_fused_matches_oracle_fuzz():
             rtol=1e-5, atol=1e-5, err_msg=f"trial {trial}",
         )
         np.testing.assert_array_equal(
-            np.asarray(pk_f)[:-1], np.asarray(pk_r)[:-1]
+            np.asarray(pk_f, dtype=np.float32)[:-1],
+            np.asarray(pk_r, dtype=np.float32)[:-1],
         )
 
 

@@ -87,6 +87,65 @@ class AllocModel:
         return sorted(o for o, ps in self.held.items() if ps)
 
 
+class ScaledAllocModel(AllocModel):
+    """AllocModel plus a host mirror of the quantized KV *scale pool*
+    (kernels/kv_quant.py): one fp32 scale per live page, born 0.0 with
+    the page, copied by COW with the page's bits, released exactly when
+    the last reference drops.  The invariant extends conservation to
+    scales: ``set(scales) == live pages`` after every op — a scale is
+    never orphaned (left behind by a free) and never double-freed
+    (removing it twice raises KeyError).
+    """
+
+    def __init__(self, alloc: BlockAllocator):
+        super().__init__(alloc)
+        self.scales = {}  # page -> float
+
+    def op_alloc(self, n: int):
+        prev_owners = set(self.held)
+        super().op_alloc(n)
+        for owner in set(self.held) - prev_owners:
+            for p in self.held[owner]:
+                # a freshly-allocated page must not still carry a scale
+                assert p not in self.scales, f"orphaned scale on page {p}"
+                self.scales[p] = 0.0
+
+    def op_cow(self, owner: int, idx: int):
+        old = self.held[owner][idx]
+        super().op_cow(owner, idx)
+        new = self.held[owner][idx]
+        if new != old:
+            assert new not in self.scales, f"orphaned scale on page {new}"
+            # device side: copy_pool_pages copies the scale row with
+            # the page bits; the writer may then grow it monotonically
+            self.scales[new] = max(self.scales[old], 0.125)
+
+    def _release(self, pages, rc):
+        for p in set(pages):
+            if rc[p] == 1:  # last reference dropped -> page is free
+                del self.scales[p]  # KeyError here == double-free
+
+    def op_free_tail(self, owner: int, k: int):
+        tail = list(self.held[owner][-k:])
+        rc = {p: self.alloc.ref_count(p) for p in set(tail)}
+        super().op_free_tail(owner, k)
+        self._release(tail, rc)
+
+    def op_free_request(self, owner: int):
+        pages = list(self.held[owner])
+        rc = {p: self.alloc.ref_count(p) for p in set(pages)}
+        super().op_free_request(owner)
+        self._release(pages, rc)
+
+    def check(self):
+        super().check()
+        live = {p for pages in self.held.values() for p in pages}
+        assert set(self.scales) == live, (
+            f"scale pool out of sync: orphaned="
+            f"{set(self.scales) - live} missing={live - set(self.scales)}"
+        )
+
+
 # ---------------------------------------------------------------------------
 # Seeded random walk (always runs, hypothesis or not)
 # ---------------------------------------------------------------------------
@@ -126,6 +185,23 @@ def test_allocator_random_walk_conserves_pages(seed):
     assert m.alloc.num_free == N_PAGES  # nothing leaked
 
 
+@pytest.mark.parametrize("seed", range(4))
+def test_scale_pool_conserved_across_fork_cow_free(seed):
+    """Quantized-KV satellite: the per-page scale pool must obey the
+    same conservation invariant as the data pages — a scale row exists
+    iff its page is live, survives fork (shared), is copied by COW, and
+    is released exactly once when the last reference drops."""
+    rng = np.random.default_rng(1000 + seed)
+    m = ScaledAllocModel(BlockAllocator(N_PAGES))
+    for _ in range(400):
+        _random_step(m, rng)
+        m.check()
+    for o in list(m.held):
+        m.op_free_request(o)
+    m.check()
+    assert m.scales == {} and m.alloc.num_free == N_PAGES
+
+
 def test_exclusive_tail_rollback_restores_free_list_exactly():
     """Draft-style cycles at random depths: allocating a tail and
     rolling it back must leave the free *list* (order included)
@@ -163,7 +239,9 @@ if hypothesis is not None:
     class AllocatorMachine(stateful.RuleBasedStateMachine):
         def __init__(self):
             super().__init__()
-            self.m = AllocModel(BlockAllocator(N_PAGES))
+            # ScaledAllocModel extends the invariant to the quantized-KV
+            # scale pool: scales never orphaned or double-freed
+            self.m = ScaledAllocModel(BlockAllocator(N_PAGES))
 
         def _pick_owner(self, data):
             owners = self.m.owners_with_pages()
