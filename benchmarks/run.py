@@ -1355,6 +1355,93 @@ def bench_serving_slo(smoke: bool = False) -> None:
 # Roofline table from dry-run artifacts
 # ---------------------------------------------------------------------------
 
+def bench_sparsity_tiers(smoke: bool = False) -> None:
+    """Perplexity-vs-throughput frontier of the per-request sparsity
+    tiers (``--tier`` on the serving stack, DESIGN.md section 16).
+
+    Serves the trained tiny char-LM once per tier through a
+    flocking-derived per-layer profile and measures (a) decode
+    throughput — batch 1 (``n_slots=1``): on XLA:CPU the per-program
+    overhead at batch 4 nearly erases the compacted-matmul win, and the
+    tier mechanism's target regime is memory-bound batch-1 decode — and
+    (b) teacher-forced perplexity of each tier's generations under the
+    full model.  Asserts the frontier's endpoints: tier 0.25 must beat
+    tier 1.0 in decode tokens/sec (the whole point of the knob).  The
+    per-layer ``k`` vectors land in the artifact header so trajectory
+    comparisons never mix budgets silently.
+    """
+    from repro.analysis.profile import derive_profile
+    from repro.core import griffin as griffin_lib
+    from repro.data.pipeline import SyntheticCorpus
+    from repro.serving.server import PagedServer
+
+    cfg, params = trained_tiny(steps=120 if smoke else 500)
+    corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
+    gcfg = GriffinConfig(sparsity=0.5)
+
+    prof_seqs = eval_sequences(cfg, n=2 if smoke else 4, length=96)
+    profile = derive_profile(cfg, params, prof_seqs)
+
+    n_req = 2 if smoke else 6
+    max_new = 32 if smoke else 64
+    rng = np.random.default_rng(23)
+    prompts = [corpus.sample(int(rng.integers(16, 32)), seed=7700 + i)
+               for i in range(n_req)]
+    warmup = [corpus.sample(24, seed=701)]
+
+    plans = {t: griffin_lib.plan_k_tree(cfg, gcfg, tier=t, profile=profile)
+             for t in griffin_lib.TIERS}
+    frontier = {}
+    for tier in griffin_lib.TIERS:
+        srv = PagedServer(cfg, params, gcfg=gcfg, page_size=16,
+                          num_pages=64, n_slots=1, prefill_chunk=32,
+                          max_len=160, profile=profile, default_tier=tier)
+        for j, p in enumerate(warmup):
+            srv.submit(p, max_new=8, rid=100_000 + j)
+        srv.drain()
+        srv.reset_metrics()
+        t0 = time.perf_counter()
+        for i, p in enumerate(prompts):
+            srv.submit(p, max_new=max_new, rid=i)
+        fin = srv.drain()
+        wall = time.perf_counter() - t0
+        m = srv.metrics.summary()
+        decode_tps = 1.0 / max(m["tpot_p50_s"], 1e-9)
+
+        nll = cnt = 0.0
+        for i in range(n_req):
+            seq = np.concatenate([prompts[i], np.asarray(fin[i])])
+            P = len(prompts[i])
+            ppl_i = evaluate.generation_ppl(
+                params, cfg, jnp.asarray(seq[None]), P, "full")
+            nll += np.log(ppl_i) * (len(seq) - P)
+            cnt += len(seq) - P
+        ppl = float(np.exp(nll / max(cnt, 1)))
+
+        frontier[str(tier)] = {
+            "decode_tok_s": decode_tps,
+            "tpot_p50_s": m["tpot_p50_s"],
+            "tokens_per_sec": m["tokens_per_sec"],
+            "generation_ppl": ppl,
+            "wall_s": wall,
+        }
+        emit(f"tier_{tier}", m["tpot_p50_s"] * 1e6,
+             f"decode_tok_s={decode_tps:.1f} ppl={ppl:.3f} "
+             f"tok_s={m['tokens_per_sec']:.1f}")
+
+    lo = frontier[str(0.25)]["decode_tok_s"]
+    hi = frontier[str(1.0)]["decode_tok_s"]
+    assert lo > hi, (
+        f"tier 0.25 decode tok/s ({lo:.1f}) must beat tier 1.0 ({hi:.1f})"
+    )
+    record("frontier", frontier)
+    record("profile", {p: list(ws) for p, ws in profile.weights})
+    set_bench_header(per_layer_k={
+        str(t): {path: list(ks) for path, ks in plans[t].items()}
+        for t in griffin_lib.TIERS
+    })
+
+
 def bench_roofline_table() -> None:
     art = Path("artifacts/dryrun")
     if not art.exists():
@@ -1394,6 +1481,7 @@ BENCHES = {
     "sharded": bench_sharded,
     "obs": bench_obs,
     "serving_slo": bench_serving_slo,
+    "sparsity_tiers": bench_sparsity_tiers,
     "roofline": bench_roofline_table,
 }
 

@@ -7,7 +7,13 @@ held-out sequence, (b) a token-permuted version, (c) uniform-random
 tokens (the Appendix C ablation), plus the inter- vs intra-sequence
 Jaccard contrast that motivates ADAPTIVE (per-sequence) selection.
 Also dumps a Figure-1-style heat map as CSV.
+
+With ``--emit-profile PATH`` it additionally runs the offline
+profile-derivation pass (analysis/profile.py) and writes a
+``SparsityProfile`` JSON artifact servable via
+``launch/serve.py --sparsity-profile PATH --tier T``.
 """
+import argparse
 import sys
 from pathlib import Path
 
@@ -46,6 +52,14 @@ def layer_activations(params, cfg, tokens):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--emit-profile", metavar="PATH", default=None,
+                    help="derive a per-layer SparsityProfile from the "
+                         "flocking pass and write it as JSON")
+    ap.add_argument("--profile-seqs", type=int, default=4,
+                    help="held-out sequences for profile derivation")
+    args = ap.parse_args()
+
     cfg, params = trained_tiny()
     rng = np.random.default_rng(0)
     seq = eval_sequences(cfg, n=1, length=192)
@@ -78,6 +92,19 @@ def main() -> None:
     hm = heatmap_data(z_real[2], tokens=128, feats=cfg.d_ff)
     np.savetxt(out, hm, delimiter=",", fmt="%.4f")
     print(f"heat map (|Z-bar|, layer 2) written to {out}")
+
+    if args.emit_profile:
+        from repro.analysis.profile import derive_profile
+
+        prof_seqs = eval_sequences(cfg, n=args.profile_seqs, length=192)
+        profile = derive_profile(cfg, params, prof_seqs)
+        dest = Path(args.emit_profile)
+        dest.parent.mkdir(parents=True, exist_ok=True)
+        profile.save(dest)
+        n_layers = sum(len(ws) for _, ws in profile.weights)
+        print(f"\nsparsity profile ({n_layers} layer weights) written to {dest}")
+        for p, ws in profile.weights:
+            print(f"  {p}: " + " ".join(f"{w:.3f}" for w in ws))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,97 @@
+"""Offline per-layer sparsity profiles from flocking statistics.
+
+The serving stack prices every FF layer at the same sparsity (the
+global ``k_ff`` budget a tier scales uniformly).  But flocking strength
+is not uniform across depth: layers whose tokens agree on a small
+expert set (high ``flocking_score``) concentrate almost all of their
+mass in the selected experts and tolerate aggressive pruning, while
+weakly-flocking layers spread mass out and degrade first.  This module
+turns that per-layer statistic into a ``griffin.SparsityProfile`` —
+per-layer keep-weights the tier multiplies — via a small offline pass
+over held-out sequences:
+
+    profile = derive_profile(cfg, params, seqs)
+    profile.save("artifacts/profile_tiny.json")
+    # serve:  --sparsity-profile artifacts/profile_tiny.json --tier 0.5
+
+Weights are ``1 - flocking_score`` (strong flocking -> keep fewer),
+normalized to mean 1 so a tier's *average* budget across layers is
+unchanged, then clipped to ``[0.5, 1.5]`` so no layer is priced more
+than 2x away from its neighbours (the divisible-``k_ff`` rule still
+rounds every per-layer ``k`` to a ``tp_shards`` multiple downstream,
+see ``griffin.tier_k``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.flocking import flocking_score
+from repro.core.griffin import SparsityProfile, ffn_widths
+from repro.models import decoder
+
+__all__ = ["derive_profile", "layer_flocking_scores"]
+
+
+def _z_instances(leaf) -> List[jax.Array]:
+    """Stats leaf -> per-instance activations ``[B, S, F]``."""
+    z = leaf["z"]
+    if z.ndim == 4:  # [n, B, S, F] scan-stacked
+        return [z[i] for i in range(z.shape[0])]
+    return [z]
+
+
+def layer_flocking_scores(cfg, params, seqs, *,
+                          top_frac: float = 0.05) -> Dict[str, Tuple[float, ...]]:
+    """Mean flocking score per FF instance: ``{"seg{i}/{name}": (f,)*n}``.
+
+    ``seqs`` is ``[N, S]`` token ids; scores average over the N
+    sequences (each sequence scored independently — the statistic is
+    per-sequence by construction, eq. 6).
+    """
+    scores: Dict[str, List[List[float]]] = {}
+    for b in range(seqs.shape[0]):
+        _, aux = decoder.forward(params, cfg, seqs[b:b + 1],
+                                 collect_stats=True, want_z=True,
+                                 remat=False, logits_mode="last")
+        st = decoder.prune_stats_tree(aux.stats, cfg)
+        for path in ffn_widths(cfg):
+            seg, name = path.split("/")
+            for i, z in enumerate(_z_instances(st[seg][name])):
+                scores.setdefault(path, [[] for _ in
+                                         _z_instances(st[seg][name])])
+                scores[path][i].append(flocking_score(z[0], top_frac))
+    return {p: tuple(float(np.mean(s)) for s in per_inst)
+            for p, per_inst in scores.items()}
+
+
+def derive_profile(cfg, params, seqs, *, top_frac: float = 0.05,
+                   clip: Tuple[float, float] = (0.5, 1.5),
+                   note: str = "") -> SparsityProfile:
+    """Flocking pass -> per-layer keep-weight profile.
+
+    Returns a ``SparsityProfile`` whose weights multiply each layer's
+    tier budget (``griffin.tier_k``).  Weights are derived as
+    ``1 - flocking_score``, normalized to mean 1 and clipped to
+    ``clip`` — a profile-less run is the ``weights == 1`` special case.
+    """
+    scores = layer_flocking_scores(cfg, params, seqs, top_frac=top_frac)
+    raw = {p: tuple(1.0 - f for f in fs) for p, fs in scores.items()}
+    flat = [w for ws in raw.values() for w in ws]
+    mean = float(np.mean(flat)) if flat else 1.0
+    if mean <= 0:  # degenerate (every layer fully flocked) — fall back flat
+        mean = 1.0
+    lo, hi = clip
+    weights = tuple(sorted(
+        (p, tuple(float(np.clip(w / mean, lo, hi)) for w in ws))
+        for p, ws in raw.items()
+    ))
+    return SparsityProfile(
+        weights=weights,
+        arch=getattr(cfg, "name", ""),
+        note=note or (f"flocking-derived, {seqs.shape[0]} seqs x "
+                      f"{seqs.shape[1]} tokens, top_frac={top_frac}, "
+                      f"clip=[{lo}, {hi}]"),
+    )

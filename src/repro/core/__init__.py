@@ -1,17 +1,29 @@
 from repro.core.griffin import (
+    TIERS,
     GriffinConfig,
+    SparsityProfile,
     aggregate_stats,
     compact,
     compact_tree,
+    plan_k_tree,
+    resolve_tier,
+    select_and_compact,
     select_experts,
     select_tree,
+    tier_k,
 )
 
 __all__ = [
+    "TIERS",
     "GriffinConfig",
+    "SparsityProfile",
     "aggregate_stats",
     "compact",
     "compact_tree",
+    "plan_k_tree",
+    "resolve_tier",
+    "select_and_compact",
     "select_experts",
     "select_tree",
+    "tier_k",
 ]

@@ -86,6 +86,69 @@ def select_topk_sampling(s: jax.Array, k: int, rng: Optional[jax.Array]) -> jax.
 
 
 # ---------------------------------------------------------------------------
+# Tier padding (DESIGN.md section 16): mixed-tier batches share one
+# compacted-width program, so narrower selections are padded up to the
+# batch width with *dead* experts — in-range gather indices whose w2
+# rows the compactor zeroes, making each pad's contribution exactly 0.
+# ---------------------------------------------------------------------------
+
+def pad_selection(
+    idx: jax.Array, k_pad: int, d_ff: int, shards: int = 1
+) -> tuple:
+    """Pad a selection of ``k`` experts to ``k_pad``, returning
+    ``(idx_padded [k_pad], keep [k_pad] bool)``.
+
+    Pad entries repeat valid in-range indices (index 0, or each shard
+    block's first index under per-shard layout) so the gather itself
+    stays well-defined; correctness comes from the caller zeroing the
+    ``w2`` rows where ``keep`` is False, which makes the padded experts
+    contribute an exact ``0.0`` to the decode matmul (bit-identical to
+    the natural-width buffers).
+
+    ``shards > 1`` preserves the per-shard interleaved layout of
+    ``select_topk_per_shard``: each contiguous shard block is padded at
+    its own tail, so under TP every device keeps its own experts plus
+    its share of the padding.
+    """
+    k = int(idx.shape[0])
+    if k_pad < k:
+        raise ValueError(f"pad_selection: k_pad {k_pad} < k {k}")
+    if k_pad == k:
+        return idx, jnp.ones((k,), bool)
+    if shards > 1:
+        if k % shards or k_pad % shards or d_ff % shards:
+            raise ValueError(
+                f"pad_selection: per-shard padding needs k ({k}), k_pad "
+                f"({k_pad}) and d_ff ({d_ff}) divisible by shards ({shards})"
+            )
+        ks, ksp, fs = k // shards, k_pad // shards, d_ff // shards
+        blocks = idx.reshape(shards, ks)
+        pad = jnp.broadcast_to(
+            (jnp.arange(shards, dtype=idx.dtype) * fs)[:, None],
+            (shards, ksp - ks),
+        )
+        idx_p = jnp.concatenate([blocks, pad], axis=1).reshape(-1)
+        keep = jnp.concatenate(
+            [jnp.ones((shards, ks), bool), jnp.zeros((shards, ksp - ks), bool)],
+            axis=1,
+        ).reshape(-1)
+        return idx_p, keep
+    idx_p = jnp.concatenate([idx, jnp.zeros((k_pad - k,), idx.dtype)])
+    keep = jnp.concatenate([jnp.ones((k,), bool), jnp.zeros((k_pad - k,), bool)])
+    return idx_p, keep
+
+
+def selected_width(mode: str, k: int, d_ff: int, block: int = 128) -> int:
+    """The index-count a selector actually returns for a requested ``k``
+    (``select_blocks`` rounds to whole blocks; every other mode returns
+    exactly ``k``).  Width planning (``griffin.plan_k_tree``) must use
+    this, not the raw ``k``, or block-mode buffers mis-size."""
+    if mode == "blocks":
+        return max(1, k // block) * block
+    return k
+
+
+# ---------------------------------------------------------------------------
 # Static baselines (section 5 comparisons)
 # ---------------------------------------------------------------------------
 

@@ -173,22 +173,24 @@ class PagedTP:
         ``tp_shards``); a non-divisible width here is a config error,
         not a replicate-fallback case."""
 
-        def leaf(key: str, arr) -> P:
+        def leaf(path: str, key: str, arr) -> P:
             axes = _PRUNED_AXES[key]
             full = (None,) * (arr.ndim - len(axes)) + axes
             spec = shlib.spec_for(full, self.rules, self.mesh, arr.shape)
             if key != "b2" and self.axis not in jax.tree.leaves(tuple(spec)):
                 raise ValueError(
-                    f"compacted FF leaf {key!r} with shape {arr.shape} is "
-                    f"not divisible by the {self.axis!r} axis "
-                    f"(size {self.n}) — pass a GriffinConfig with "
-                    f"tp_shards={self.n} so k_ff is padded to a multiple."
+                    f"compacted FF leaf {path}/{key} with shape {arr.shape} "
+                    f"is not divisible by the {self.axis!r} axis "
+                    f"(size {self.n}) — the divisible-k_ff rule holds per "
+                    f"layer: pass a GriffinConfig with tp_shards={self.n} "
+                    f"(tier budgets pad each layer's k to a multiple, see "
+                    f"griffin.tier_k)."
                 )
             return spec
 
         return {
             seg: {
-                name: {k: leaf(k, v) for k, v in ffn.items()}
+                name: {k: leaf(f"{seg}/{name}", k, v) for k, v in ffn.items()}
                 for name, ffn in layers.items()
             }
             for seg, layers in pruned.items()
@@ -220,7 +222,16 @@ class PagedTP:
         )
 
     def _pruned_key(self, pruned: Any) -> Any:
-        return None if pruned is None else jax.tree.structure(pruned)
+        # structure AND shapes: tier buckets re-size the compacted width
+        # between ticks, and a step factory built for one width must not
+        # serve another (its in_specs were resolved against the shapes
+        # it first saw)
+        if pruned is None:
+            return None
+        return (
+            jax.tree.structure(pruned),
+            tuple(a.shape for a in jax.tree.leaves(pruned)),
+        )
 
     def prefill(self, pool_specs: Any, collect: bool, pruned: Any) -> Callable:
         key = ("prefill", collect, self._pruned_key(pruned))

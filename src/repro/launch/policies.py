@@ -85,8 +85,10 @@ def policy_for(cfg: ModelConfig, shape: ShapeConfig, *,
 
     gcfg = None
     if use_griffin and cfg.griffin and cfg.has_ffn and shape.kind != "train":
-        gcfg = GriffinConfig(sparsity=griffin_sparsity, per_shard_topk=True,
-                             tp_shards=16)
+        # per_shard_topk inherits griffin.DEFAULT_PER_SHARD_TOPK (the
+        # single source launch/serve.py also uses) — balanced shard-local
+        # selection is required under tp_shards anyway
+        gcfg = GriffinConfig(sparsity=griffin_sparsity, tp_shards=16)
 
     return CellPolicy(
         rules=rules,

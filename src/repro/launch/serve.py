@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.registry import ASSIGNED_ARCHS, get_config
-from repro.core import GriffinConfig
+from repro.core import TIERS, GriffinConfig, SparsityProfile
 from repro.data.pipeline import SyntheticCorpus
 from repro.launch.mesh import make_serving_mesh
 from repro.models import decoder
@@ -63,6 +63,20 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--sparsity", type=float, default=0.5)
     ap.add_argument("--no-griffin", action="store_true")
+    ap.add_argument("--tier", type=float, default=None,
+                    choices=list(TIERS),
+                    help="per-request sparsity tier: the fraction of FF "
+                         "experts every request keeps (1.0 = dense "
+                         "path, bit-exact).  Synthetic requests all "
+                         "carry it; in --http mode it becomes the "
+                         "default for requests that don't send a "
+                         "\"tier\" field.  Omit for the legacy global "
+                         "--sparsity budget")
+    ap.add_argument("--sparsity-profile", default=None, metavar="PATH",
+                    help="per-layer expert-budget profile JSON (emit one "
+                         "with examples/flocking_analysis.py "
+                         "--emit-profile); scales each layer's tier "
+                         "budget by its weight.  Requires --tier")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="self-speculative decoding: tokens drafted per "
                          "verify with the GRIFFIN-compacted weights "
@@ -154,8 +168,22 @@ def main() -> None:
         cfg = get_config(args.arch, smoke=True)
         params = decoder.init_params(cfg, jax.random.PRNGKey(0))
 
+    # per_shard_topk inherits the single-sourced default
+    # (griffin.DEFAULT_PER_SHARD_TOPK) — inert at tp_shards=1, and the
+    # server forces it on under a mesh either way
     gcfg = None if (args.no_griffin or not cfg.griffin or not cfg.has_ffn) \
-        else GriffinConfig(sparsity=args.sparsity, per_shard_topk=False)
+        else GriffinConfig(sparsity=args.sparsity)
+    profile = None
+    if args.sparsity_profile is not None:
+        if args.tier is None:
+            ap.error("--sparsity-profile requires --tier (profiles scale "
+                     "tier budgets)")
+        profile = SparsityProfile.load(args.sparsity_profile)
+        print(f"[profile] {args.sparsity_profile} "
+              f"({len(profile.weights)} layer weights, "
+              f"arch={profile.arch or '?'})")
+    if args.tier is not None and gcfg is None:
+        ap.error("--tier requires GRIFFIN (drop --no-griffin)")
     corpus = SyntheticCorpus(vocab=cfg.vocab_size, seed=0)
     rng = np.random.default_rng(0)
     reqs = [
@@ -165,6 +193,8 @@ def main() -> None:
     ]
 
     mode = f"GRIFFIN@{args.sparsity:.0%}" if gcfg else "full model"
+    if args.tier is not None:
+        mode = f"GRIFFIN tier={args.tier}" + ("+profile" if profile else "")
     if args.spec_k and gcfg is None:
         ap.error("--spec-k requires GRIFFIN (drop --no-griffin)")
     if args.spec_k and not decoder.supports_paged(cfg):
@@ -215,6 +245,7 @@ def main() -> None:
             kv_dtype=args.kv_dtype, mesh=mesh,
             tp_axis=args.mesh[0] if args.mesh else "model",
             tracer=tracer, flocking_every=args.flocking_telemetry,
+            profile=profile, default_tier=args.tier,
         )
         if args.http is not None:
             import asyncio

@@ -1018,23 +1018,35 @@ def extract_ffn_tree(params: Dict, cfg) -> Dict:
     return out
 
 
-def pruned_ffn_specs(cfg, sparsity: float) -> Dict:
+def pruned_ffn_specs(cfg, sparsity: Optional[float] = None, *,
+                     gcfg=None, tier: Optional[float] = None,
+                     profile=None) -> Dict:
     """ParamSpec tree of the GRIFFIN-compacted decode FF blocks (for the
-    dry-run's abstract inputs), mirroring ``extract_ffn_tree``."""
+    dry-run's abstract inputs), mirroring ``extract_ffn_tree``.
+
+    Budgets come from the profile API (``griffin.plan_k_tree``): pass a
+    ``gcfg`` (plus optional ``tier``/``profile``) for per-layer widths,
+    or the legacy ``sparsity`` scalar, which maps to the uniform
+    ``keep = 1 - sparsity`` budget.  Scan-stacked leaves take the widest
+    instance's width (narrower instances ride with dead zero rows, see
+    DESIGN.md section 16)."""
+    from repro.core import griffin as griffin_lib
+
+    if gcfg is None:
+        if sparsity is None:
+            raise ValueError("pruned_ffn_specs: pass sparsity or gcfg")
+        gcfg = griffin_lib.GriffinConfig(sparsity=sparsity)
+    ks = griffin_lib.plan_k_tree(cfg, gcfg, tier=tier, profile=profile)
     out: Dict[str, Any] = {}
     for i, seg in enumerate(build_plan(cfg)):
         key = f"seg{i}"
         seg_out = {}
         for j, desc in enumerate(seg.descs):
             name = f"pos{j}" if seg.kind == "scan" else f"layer{j}"
-            if desc.ffn == "dense":
-                F = cfg.d_ff
-            elif desc.ffn == "moe" and cfg.num_shared_experts:
-                F = cfg.moe_d_ff * cfg.num_shared_experts
-            else:
+            path = f"{key}/{name}"
+            if path not in ks:
                 continue
-            k = max(1, int(round(F * (1.0 - sparsity))))
-            specs = ffn_lib.ffn_specs(cfg, d_ff=k)
+            specs = ffn_lib.ffn_specs(cfg, d_ff=max(ks[path]))
             if seg.kind == "scan":
                 specs = param_lib.stack_specs(specs, seg.n)
             seg_out[name] = specs

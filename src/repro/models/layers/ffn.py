@@ -201,6 +201,52 @@ def compact_ffn_params(params: Dict, idx: jax.Array, shards: int = 1) -> Dict:
     return out
 
 
+# expert-axis position per compacted-FF leaf (negative: leaves may carry
+# leading scan/slot axes); b2 has no expert axis
+_EXPERT_AXIS = {"w1": -1, "wg": -1, "w2": -2, "b1": -1, "bg": -1}
+
+
+def pad_compacted(params: Dict, k_pad: int, shards: int = 1) -> Dict:
+    """Zero-pad a compacted FF block's expert axis from ``k`` to
+    ``k_pad`` (DESIGN.md section 16: mixed-tier ticks bucket every
+    request's buffers to one width so the batch stays one program).
+
+    Zero ``w2`` rows make the padded experts contribute exactly ``0.0``
+    — bit-identical outputs to the natural-width buffers (the zero
+    ``w1``/``wg`` columns and ``b1``/``bg`` entries only feed those dead
+    rows).  ``shards > 1`` pads each contiguous shard block at its own
+    tail so the TP expert-to-device assignment of the real experts is
+    unchanged.
+    """
+    k = params["w2"].shape[-2]
+    if k_pad == k:
+        return dict(params)
+    if k_pad < k:
+        raise ValueError(f"pad_compacted: k_pad {k_pad} < k {k}")
+    if shards > 1 and (k % shards or k_pad % shards):
+        raise ValueError(
+            f"pad_compacted: per-shard padding needs k ({k}) and k_pad "
+            f"({k_pad}) divisible by shards ({shards})"
+        )
+
+    def pad(v, ax):
+        ax = v.ndim + ax
+        if shards == 1:
+            widths = [(0, 0)] * v.ndim
+            widths[ax] = (0, k_pad - k)
+            return jnp.pad(v, widths)
+        shape = v.shape[:ax] + (shards, k // shards) + v.shape[ax + 1:]
+        widths = [(0, 0)] * (v.ndim + 1)
+        widths[ax + 1] = (0, (k_pad - k) // shards)
+        out = jnp.pad(v.reshape(shape), widths)
+        return out.reshape(v.shape[:ax] + (k_pad,) + v.shape[ax + 1:])
+
+    return {
+        name: pad(v, _EXPERT_AXIS[name]) if name in _EXPERT_AXIS else v
+        for name, v in params.items()
+    }
+
+
 def pruned_specs(cfg, k: int, d_ff: Optional[int] = None) -> Dict[str, ParamSpec]:
     """Specs of the compacted decode-phase FF block (for dry-run inputs)."""
     return ffn_specs(cfg, d_ff=k)

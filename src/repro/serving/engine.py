@@ -65,9 +65,9 @@ class GenerationEngine:
     # -- GRIFFIN ----------------------------------------------------------
     def select_and_compact(self, stats) -> Dict:
         stats = decoder.prune_stats_tree(stats, self.cfg)
-        sel = griffin_lib.select_tree(stats, self.gcfg)
         ffn_tree = decoder.extract_ffn_tree(self.params, self.cfg)
-        return griffin_lib.compact_tree(ffn_tree, sel)
+        pruned, _ = griffin_lib.select_and_compact(stats, ffn_tree, self.gcfg)
+        return pruned
 
     # -- API ---------------------------------------------------------------
     def generate(
@@ -174,9 +174,8 @@ class ContinuousBatcher:
         )
         if self.gcfg:
             stats = decoder.prune_stats_tree(aux.stats, self.cfg)
-            sel = griffin_lib.select_tree(stats, self.gcfg)
             ffn_tree = decoder.extract_ffn_tree(self.params, self.cfg)
-            pruned1 = griffin_lib.compact_tree(ffn_tree, sel)
+            pruned1, _ = griffin_lib.select_and_compact(stats, ffn_tree, self.gcfg)
             if self.pruned is None:
                 self.pruned = jax.tree.map(
                     lambda x: jnp.broadcast_to(x, (self.n_slots,) + x.shape).copy(),

@@ -68,6 +68,7 @@ from typing import Any, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.core.griffin import resolve_tier as griffin_resolve_tier
 from repro.serving.scheduler import QUEUED, ScheduledRequest
 from repro.serving.slo import DEFAULT_SLO, SLOClass, resolve_slo
 
@@ -240,14 +241,27 @@ class ServingFrontend:
     def submit(self, prompt: np.ndarray, max_new: int, *,
                slo: Union[str, SLOClass, None] = None,
                deadline_s: Optional[float] = None,
-               priority: Optional[int] = None) -> StreamHandle:
+               priority: Optional[int] = None,
+               tier: Optional[float] = None) -> StreamHandle:
         """Accept a request (synchronous — callable from handlers and
         tests alike).  Raises :class:`QueueFull` under backpressure and
         :class:`RequestRejected` for unservable requests.
 
         ``deadline_s`` overrides the class TTFT deadline (relative
-        seconds from now); ``priority`` overrides the class priority."""
+        seconds from now); ``priority`` overrides the class priority;
+        ``tier`` (one of ``griffin.TIERS``) overrides the class
+        sparsity tier — the fraction of FF experts the request keeps."""
         cls = resolve_slo(slo if slo is not None else self.default_slo)
+        if tier is not None:
+            try:
+                tier = griffin_resolve_tier(tier)
+            except ValueError as e:
+                raise RequestRejected(str(e)) from None
+            cls = SLOClass(cls.name, cls.priority, cls.ttft_deadline_s,
+                           tier=tier)
+        if cls.tier is not None and getattr(self.server, "gcfg", None) is None:
+            raise RequestRejected(
+                f"tier {cls.tier} needs a GRIFFIN-enabled server")
         prompt = np.asarray(prompt, np.int32)
         max_new = int(max_new)
         if len(prompt) < 1 or max_new < 1:
@@ -266,7 +280,8 @@ class ServingFrontend:
         rel = deadline_s if deadline_s is not None else cls.ttft_deadline_s
         deadline = (now + rel) if rel is not None else None
         if priority is not None:
-            cls = SLOClass(cls.name, int(priority), cls.ttft_deadline_s)
+            cls = SLOClass(cls.name, int(priority), cls.ttft_deadline_s,
+                           tier=cls.tier)
         h = StreamHandle(self, self._next_rid, prompt, max_new, cls,
                          deadline, now)
         self._next_rid += 1
@@ -364,8 +379,12 @@ class ServingFrontend:
                            h._pending_seq))
         for h in order[:room]:
             self._pending.remove(h)
+            # tier only when set: untiered admission stays compatible
+            # with engine-shaped servers that predate the tier kwarg
+            kw = {} if h.slo.tier is None else {"tier": h.slo.tier}
             self.server.submit(h.prompt, h.max_new, rid=h.rid,
-                               priority=h.slo.priority, deadline=h.deadline)
+                               priority=h.slo.priority, deadline=h.deadline,
+                               **kw)
             h._sched_ref = self.sched.lookup(h.rid)
             assert h._sched_ref is not None
             h.state = ACTIVE
@@ -527,7 +546,8 @@ class ServingFrontend:
         try:
             h = self.submit(np.asarray(prompt, np.int32), max_new,
                             slo=payload.get("slo"),
-                            deadline_s=payload.get("deadline_s"))
+                            deadline_s=payload.get("deadline_s"),
+                            tier=payload.get("tier"))
         except QueueFull:
             await self._respond_json(writer, 429,
                                      {"error": "overloaded, retry later"})
@@ -540,8 +560,10 @@ class ServingFrontend:
             b"Content-Type: text/event-stream\r\n"
             b"Cache-Control: no-store\r\n"
             b"Connection: close\r\n\r\n")
-        writer.write(_sse("accepted",
-                          {"rid": h.rid, "slo": h.slo.name}))
+        accepted = {"rid": h.rid, "slo": h.slo.name}
+        if h.slo.tier is not None:
+            accepted["tier"] = h.slo.tier
+        writer.write(_sse("accepted", accepted))
         # disconnect watch: SSE clients send nothing after the request,
         # so any read completion (b"" on EOF or stray bytes) means the
         # peer went away and the generation should be cancelled

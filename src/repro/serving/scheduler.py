@@ -150,9 +150,16 @@ class ScheduledRequest:
     compacted: bool = False  # GRIFFIN selection frozen
     preemptions: int = 0
     aborted: bool = False
+    # per-request sparsity tier (DESIGN.md section 16): the fraction of
+    # FF experts this request keeps.  None = legacy global gcfg budget;
+    # 1.0 decodes through the dense path (no compaction at all)
+    tier: Optional[float] = None
     # server-managed GRIFFIN payloads (jax trees; opaque to the scheduler)
     s_sq_acc: Any = None
     pruned_host: Any = None
+    # natural per-layer buffer widths of pruned_host ({path: k}, set at
+    # compaction) — the server's tick bucketing reads these
+    k_widths: Any = None
 
     @property
     def prefill_tokens(self) -> np.ndarray:
@@ -234,7 +241,8 @@ class Scheduler:
     # -- submission --------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int, rid: int,
                priority: int = 0,
-               deadline: Optional[float] = None) -> ScheduledRequest:
+               deadline: Optional[float] = None,
+               tier: Optional[float] = None) -> ScheduledRequest:
         live = list(self.queue) + list(self.decoding)
         if self.prefilling is not None:
             live.append(self.prefilling)
@@ -255,7 +263,8 @@ class Scheduler:
                 f"{self.pcfg.max_request_len}"
             )
         req = ScheduledRequest(rid, prompt, max_new, priority=priority,
-                               seq=next(self._seq), deadline=deadline)
+                               seq=next(self._seq), deadline=deadline,
+                               tier=tier)
         self.queue.append(req)
         self.metrics.on_submit(rid, len(prompt), priority)
         return req

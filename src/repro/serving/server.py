@@ -151,6 +151,8 @@ class PagedServer:
         tp_axis: str = "model",
         tracer: Optional[Tracer] = None,
         flocking_every: int = 0,
+        profile: Optional[griffin_lib.SparsityProfile] = None,
+        default_tier: Optional[float] = None,
     ):
         assert decoder.supports_paged(cfg), (
             f"{cfg.name}: paged serving covers attention families only"
@@ -208,6 +210,22 @@ class PagedServer:
                 self.gcfg = self.gcfg.replace(
                     tp_shards=self.tp.n, per_shard_topk=True
                 )
+        # per-layer profiles + request tiers (DESIGN.md section 16)
+        self.profile = profile
+        self.default_tier = griffin_lib.resolve_tier(default_tier)
+        if (profile is not None or self.default_tier is not None) \
+                and self.gcfg is None:
+            raise ValueError(
+                "sparsity profile/tier needs gcfg: tiers scale the "
+                "GRIFFIN per-layer expert budgets"
+            )
+        self._k_trees: Dict[float, Dict] = {}  # tier -> plan_k_tree
+        self._ffn_F = griffin_lib.ffn_widths(cfg) if self.gcfg is not None \
+            else {}
+        # tick bucketing state: the widths signature the installed slot
+        # buffers were padded to, and which request each slot holds
+        self._bucket_sig = None
+        self._slot_rid: Dict[int, int] = {}
         self.sched = Scheduler(self.pcfg, n_slots, prefill_chunk,
                                metrics=metrics, prefix_cache=prefix_cache)
         self.sched.needs_stats = self.gcfg is not None
@@ -379,11 +397,27 @@ class PagedServer:
 
     def submit(self, prompt: np.ndarray, max_new: int,
                rid: Optional[int] = None, priority: int = 0,
-               deadline: Optional[float] = None) -> int:
+               deadline: Optional[float] = None,
+               tier: Optional[float] = None) -> int:
+        """``tier`` (one of ``griffin.TIERS``): the fraction of FF
+        experts this request keeps — 1.0 decodes dense, lower tiers
+        trade perplexity for decode throughput through the per-layer
+        profile.  None falls back to the server's ``default_tier``
+        (itself None → the legacy global ``gcfg`` budget).  In
+        speculative mode tiers do not change outputs: drafts always use
+        the global budget and every committed token comes from the
+        dense verifier."""
+        tier = griffin_lib.resolve_tier(tier)
+        if tier is not None and self.gcfg is None:
+            raise ValueError(
+                f"request tier {tier} needs gcfg: tiers scale the "
+                f"GRIFFIN per-layer expert budgets"
+            )
         if rid is None:
             rid = self._next_rid
         self._next_rid = max(self._next_rid, rid + 1)
-        self.sched.submit(prompt, max_new, rid, priority, deadline=deadline)
+        self.sched.submit(prompt, max_new, rid, priority, deadline=deadline,
+                          tier=tier)
         return rid
 
     def step(self) -> bool:
@@ -534,7 +568,8 @@ class PagedServer:
         # vanilla GRIFFIN mode that is the request's compacted weights; in
         # speculative mode every committed token came from the *dense*
         # verifier, so the rebuild must stay dense too.
-        use_pruned = work.use_pruned and not self.spec_k
+        use_pruned = work.use_pruned and not self.spec_k \
+            and req.pruned_host is not None  # tier 1.0 rebuilds dense
         pruned = self._expand_b1(req.pruned_host) if use_pruned else None
         with self.tracer.jax_annotation("prefill_chunk"):
             logits, self.pools, stats = self._prefill(
@@ -559,23 +594,44 @@ class PagedServer:
         self.sched.finish_prefill_chunk(work, first_token)
         if work.is_last and req.state == DECODING and self.gcfg is not None:
             if not req.compacted:
-                sel = griffin_lib.select_tree(req.s_sq_acc, self.gcfg)
-                ffn_tree = decoder.extract_ffn_tree(self._host_params,
-                                                    self.cfg)
-                # tp_shards > 1: shard-local balanced gather (identical
-                # weights, collective-free layout under the mesh)
-                req.pruned_host = griffin_lib.compact_tree(
-                    ffn_tree, sel, shards=self.gcfg.tp_shards
-                )
-                if self.flocking is not None:
-                    # frozen selection + the statistic it was made from,
-                    # captured before the accumulator is dropped
-                    self.flocking.on_select(
-                        req.rid, jax.tree.map(np.asarray, sel),
-                        jax.tree.map(np.asarray, req.s_sq_acc))
+                tier = req.tier if req.tier is not None else self.default_tier
+                if self.spec_k:
+                    # drafts always use the global budget: the dense
+                    # verifier commits every token, so tiering the draft
+                    # would change speed, never outputs
+                    tier = None
+                if tier == 1.0:
+                    # dense tier: no selection, no compacted buffers —
+                    # every decode of this request runs the unmodified
+                    # dense program (bit-exact to a no-gcfg server)
+                    req.pruned_host = None
+                    req.k_widths = None
+                else:
+                    ffn_tree = decoder.extract_ffn_tree(self._host_params,
+                                                        self.cfg)
+                    ks = None if tier is None else self._k_tree(tier)
+                    # per-layer budgets + shard-aware compaction behind
+                    # one entry point (griffin.select_and_compact);
+                    # ks=None is bit-identical to the legacy global
+                    # select_tree + compact_tree path
+                    req.pruned_host, req.k_widths = \
+                        griffin_lib.select_and_compact(
+                            req.s_sq_acc, ffn_tree, self.gcfg, ks=ks)
+                    if self.flocking is not None and tier is None:
+                        # frozen selection + the statistic it was made
+                        # from, captured before the accumulator drops
+                        # (telemetry compares against the global budget,
+                        # so tiered requests are not tracked)
+                        sel = griffin_lib.select_tree(req.s_sq_acc,
+                                                      self.gcfg)
+                        self.flocking.on_select(
+                            req.rid, jax.tree.map(np.asarray, sel),
+                            jax.tree.map(np.asarray, req.s_sq_acc))
                 req.compacted = True
                 req.s_sq_acc = None
-            self._install_pruned(req.slot, req.pruned_host)
+            # slot install is deferred to the decode tick
+            # (_sync_pruned_slots): the buffer width every request pads
+            # to depends on which tiers share that tick
 
     def _decode_inputs(self, reqs: List[ScheduledRequest]):
         """Padded one-token decode inputs for the batch: each request's
@@ -597,20 +653,50 @@ class PagedServer:
     def _run_decode(self, reqs: List[ScheduledRequest]) -> None:
         B = self.n_slots
         toks, pos, mask, bts, W = self._decode_inputs(reqs)
-        self._count_attn_bytes([r.cache_len for r in reqs], 1, W, rows=B)
         # spec mode: the compacted weights are only the *draft* — a
         # vanilla tick (pool-pressure fallback) must decode dense, or its
         # tokens and KV diverge from the dense stream the verifier commits
-        pruned = self.pruned_slots \
-            if (self.gcfg is not None and not self.spec_k) else None
-        with self.tracer.jax_annotation("decode_step"):
-            logits, self.pools = self._decode(
-                self.params, self.pools, jnp.asarray(bts), jnp.asarray(toks),
-                jnp.asarray(pos), jnp.asarray(mask), pruned,
-            )
-        logits = np.asarray(logits)  # [slots, 1, V]
+        use_griffin = self.gcfg is not None and not self.spec_k
+        pruned = self._sync_pruned_slots(reqs) if use_griffin else None
+        dense_rows = [r for r in reqs if r.pruned_host is None] \
+            if use_griffin else list(reqs)
+        pruned_rows = [r for r in reqs if r.pruned_host is not None] \
+            if use_griffin else []
+        if pruned is None:
+            groups = [(None, list(reqs))]
+        elif not dense_rows:
+            groups = [(pruned, list(reqs))]
+        else:
+            # mixed tick: compacted tiers share one padded-width pruned
+            # program; tier-1.0 rows run the unmodified *dense* program
+            # in a second dispatch.  Routing dense rows through
+            # identity-compacted per-slot weights instead is NOT
+            # bit-exact (the per-slot einsum contracts in a different
+            # order, ~1e-7 logit wobble), and tier 1.0 promises the
+            # dense path bit-exactly.  Each call masks the other
+            # group's rows, so KV writes and committed tokens never mix.
+            groups = [(pruned, pruned_rows), (None, dense_rows)]
+        logits_by_slot = {}
+        for pr, group in groups:
+            gmask = mask
+            if len(group) != len(reqs):
+                gmask = np.zeros_like(mask)
+                for r in group:
+                    gmask[r.slot] = mask[r.slot]
+            self._count_attn_bytes([r.cache_len for r in group], 1, W,
+                                   rows=B)
+            with self.tracer.jax_annotation("decode_step"):
+                logits, self.pools = self._decode(
+                    self.params, self.pools, jnp.asarray(bts),
+                    jnp.asarray(toks), jnp.asarray(pos), jnp.asarray(gmask),
+                    pr,
+                )
+            logits = np.asarray(logits)  # [slots, 1, V]
+            for r in group:
+                logits_by_slot[r.slot] = logits[r.slot]
         for req in reqs:
-            self.sched.finish_decode_token(req, int(np.argmax(logits[req.slot, 0])))
+            self.sched.finish_decode_token(
+                req, int(np.argmax(logits_by_slot[req.slot][0])))
 
     # -- flocking telemetry (obs/flocking.py) ------------------------------
     def _run_flocking_probe(self, reqs: List[ScheduledRequest]) -> None:
@@ -718,6 +804,10 @@ class PagedServer:
             draft[req.rid] = []
         bts_j = jnp.asarray(bts)
         num_steps = max(ks.values())
+        # in spec mode every request compacts at the global budget
+        # (tier=None), so the synced tree is always the uniform-width
+        # legacy layout
+        pruned_slots = self._sync_pruned_slots(reqs)
 
         # modeled attention traffic: at draft iteration ``i`` only the
         # slots still inside their own ``k_r`` are live — masked rows
@@ -766,7 +856,7 @@ class PagedServer:
                     self.params, self.pools, jnp.asarray(btsd),
                     jnp.asarray(toks), jnp.asarray(pos),
                     jnp.asarray(kr_arr), jnp.asarray(live_arr),
-                    self.pruned_slots, n_scan,
+                    pruned_slots, n_scan,
                 )
             dr = np.asarray(dr)  # [slots, num_steps]
             vlogits = np.asarray(vlogits)  # [slots, K+1, V]
@@ -790,7 +880,7 @@ class PagedServer:
                     mask[s, 0] = i < ks[req.rid]
                 logits, self.pools = self._decode(
                     self.params, self.pools, bts_j, jnp.asarray(toks),
-                    jnp.asarray(pos), jnp.asarray(mask), self.pruned_slots,
+                    jnp.asarray(pos), jnp.asarray(mask), pruned_slots,
                 )
                 logits = np.asarray(logits)
                 for req in reqs:
@@ -856,6 +946,67 @@ class PagedServer:
             self.sched.rollback_draft(req)
 
     # -- per-slot GRIFFIN weights ------------------------------------------
+    def _k_tree(self, tier: float) -> Dict:
+        """Per-layer expert budgets for a tier (cached — static per
+        server: cfg, gcfg and profile never change after init)."""
+        if tier not in self._k_trees:
+            self._k_trees[tier] = griffin_lib.plan_k_tree(
+                self.cfg, self.gcfg, tier=tier, profile=self.profile)
+        return self._k_trees[tier]
+
+    def _tick_widths(self, reqs: List[ScheduledRequest]) -> Dict[str, int]:
+        """Buffer width per FF layer for this tick's compacted batch.
+
+        A single-width batch (all requests at one tier, or all legacy)
+        keeps its natural widths — today's exact program shapes.  Mixed
+        widths bucket to the next power of two above the tick's max
+        (rounded to a ``tp_shards`` multiple, capped at ``d_ff``), so
+        the distinct-program count stays ~log2(d_ff) instead of one per
+        tier combination; padding is bit-exact (zero ``w2`` rows)."""
+        sigs = {tuple(sorted(r.k_widths.items())) for r in reqs}
+        if len(sigs) == 1:
+            return dict(next(iter(sigs)))
+        sh = self.gcfg.tp_shards
+        out = {}
+        for path, (_, F) in self._ffn_F.items():
+            m = max(r.k_widths[path] for r in reqs)
+            w = 1 << (m - 1).bit_length()
+            if sh > 1:
+                w = -(-w // sh) * sh
+            out[path] = min(F, w)
+        return out
+
+    def _sync_pruned_slots(self, reqs: List[ScheduledRequest]
+                           ) -> Optional[Dict]:
+        """Bring ``self.pruned_slots`` up to date for this tick's batch
+        and return it (None when nobody needs compacted weights — an
+        all-dense-tier tick runs the plain dense program).
+
+        Buffers are installed lazily per (slot, rid): while the tick's
+        width signature is stable, only requests that newly entered (or
+        moved) a slot are written (``.at[slot].set`` — the legacy
+        incremental behavior); a width change rebuilds every live slot
+        at the new bucket."""
+        pruned_reqs = [r for r in reqs if r.pruned_host is not None]
+        if not pruned_reqs:
+            return None
+        widths = self._tick_widths(pruned_reqs)
+        sig = tuple(sorted(widths.items()))
+        if sig != self._bucket_sig:
+            self._bucket_sig = sig
+            self.pruned_slots = None
+            self._slot_rid = {}
+        shards = self.gcfg.tp_shards
+        for r in pruned_reqs:
+            if self._slot_rid.get(r.slot) != r.rid:
+                self._install_pruned(
+                    r.slot,
+                    griffin_lib.pad_pruned_tree(r.pruned_host, widths,
+                                                shards=shards),
+                )
+                self._slot_rid[r.slot] = r.rid
+        return self.pruned_slots
+
     def _expand_b1(self, pruned1: Dict) -> Dict:
         """A request's compacted FF tree in the batch-of-1 slot layout
         ``decode_step_paged`` expects (slot axis 0 for unrolled layers,

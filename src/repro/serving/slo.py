@@ -37,10 +37,19 @@ class SLOClass:
     name: str
     priority: int
     ttft_deadline_s: Optional[float]  # None = no deadline (never shed)
+    # per-request sparsity tier (griffin.TIERS): fraction of FF experts
+    # kept.  None = the server's default (quality knob rides the same
+    # wire object as the latency knobs, so a class can pin e.g. batch
+    # traffic to a cheap tier)
+    tier: Optional[float] = None
 
     def __post_init__(self):
         if self.ttft_deadline_s is not None and self.ttft_deadline_s <= 0:
             raise ValueError(f"ttft_deadline_s must be > 0, got {self.ttft_deadline_s}")
+        if self.tier is not None:
+            from repro.core.griffin import resolve_tier
+
+            object.__setattr__(self, "tier", resolve_tier(self.tier))
 
 
 SLO_CLASSES: Dict[str, SLOClass] = {

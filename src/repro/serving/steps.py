@@ -36,10 +36,12 @@ def build_prefill_step(cfg, gcfg: Optional[griffin_lib.GriffinConfig],
         out = {"last_logits": logits[:, 0], "kv": aux.kv, "pruned": {}}
         if use_griffin:
             stats = decoder.prune_stats_tree(aux.stats, cfg)
-            sel = griffin_lib.select_tree(stats, gcfg)
             ffn_tree = decoder.extract_ffn_tree(params, cfg)
-            shards = gcfg.tp_shards if gcfg.per_shard_topk else 1
-            out["pruned"] = griffin_lib.compact_tree(ffn_tree, sel, shards=shards)
+            # single selection/compaction entry point (per-layer widths
+            # come back too, but the legacy global budget is uniform)
+            out["pruned"], _ = griffin_lib.select_and_compact(
+                stats, ffn_tree, gcfg
+            )
         return out
 
     return prefill_step

@@ -1,0 +1,92 @@
+"""Subprocess: 8 host devices — per-request sparsity tiers under TP.
+
+Three identities on the shard_mapped PagedServer (model axis 2 and 4):
+
+* tier=0.5 (uniform, no profile) is token-identical to the legacy
+  global sparsity=0.5 path — same trace, with preemption, a prefix-
+  cache hit, and spec_k ∈ {0, 4},
+* tier=1.0 is token-identical to the dense (gcfg=None) server,
+* each stream of a mixed-tier batch matches its single-tier run.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core import GriffinConfig
+from repro.launch.mesh import make_serving_mesh
+from repro.models import decoder
+from repro.serving.server import PagedServer
+
+assert jax.device_count() == 8, jax.device_count()
+
+CFG = get_config("tinylm-tp")
+PARAMS = decoder.init_params(CFG, jax.random.PRNGKey(0))
+
+RNG = np.random.default_rng(13)
+SHARED = RNG.integers(0, CFG.vocab_size, size=16).astype(np.int32)
+PROMPTS = [
+    np.concatenate([SHARED, RNG.integers(0, CFG.vocab_size, size=8).astype(np.int32)]),
+    np.concatenate([SHARED, RNG.integers(0, CFG.vocab_size, size=10).astype(np.int32)]),
+    RNG.integers(0, CFG.vocab_size, size=24).astype(np.int32),
+    RNG.integers(0, CFG.vocab_size, size=20).astype(np.int32),
+]
+MAX_NEW = 10
+
+
+def serve(mesh, n_shards, spec_k, *, tiers=None, griffin=True):
+    gcfg = (GriffinConfig(sparsity=0.5, tp_shards=n_shards)
+            if griffin else None)
+    srv = PagedServer(
+        CFG, PARAMS, gcfg=gcfg, page_size=8, num_pages=10, n_slots=3,
+        prefill_chunk=16, max_len=64, spec_k=spec_k, mesh=mesh,
+    )
+    for i, p in enumerate(PROMPTS):
+        tier = None if tiers is None else tiers[i]
+        srv.submit(p, MAX_NEW, rid=i, tier=tier)
+    out = srv.drain()
+    return srv, out, srv.metrics.summary()
+
+
+for n in (2, 4):
+    mesh = make_serving_mesh(n)
+
+    # 1) tier=0.5 uniform == legacy global sparsity=0.5, spec_k ∈ {0, 4}
+    for spec_k in (0, 4):
+        _, legacy, m1 = serve(mesh, n, spec_k)
+        _, tiered, m2 = serve(mesh, n, spec_k, tiers=[0.5] * 4)
+        assert legacy == tiered, (
+            f"model={n} spec_k={spec_k}: tier=0.5 diverged from legacy\n"
+            f"legacy: {legacy}\ntiered: {tiered}"
+        )
+        if spec_k == 0:
+            assert m1["preemptions"] >= 1 and m2["preemptions"] >= 1, (m1, m2)
+
+    # 2) tier=1.0 == dense oracle (no GRIFFIN at all)
+    _, dense, _ = serve(mesh, n, 0, griffin=False)
+    _, full, _ = serve(mesh, n, 0, tiers=[1.0] * 4)
+    assert dense == full, (
+        f"model={n}: tier=1.0 diverged from dense\n"
+        f"dense: {dense}\ntier=1.0: {full}"
+    )
+
+    # 3) mixed-tier batch: each stream matches its single-tier run
+    mixed_tiers = [0.25, 0.5, 1.0, 0.5]
+    _, mixed, _ = serve(mesh, n, 0, tiers=mixed_tiers)
+    for i, t in enumerate(mixed_tiers):
+        solo_srv = PagedServer(
+            CFG, PARAMS, gcfg=GriffinConfig(sparsity=0.5, tp_shards=n),
+            page_size=8, num_pages=10, n_slots=3, prefill_chunk=16,
+            max_len=64, mesh=mesh,
+        )
+        solo_srv.submit(PROMPTS[i], MAX_NEW, rid=i, tier=t)
+        solo = solo_srv.drain()
+        assert mixed[i] == solo[i], (
+            f"model={n} rid={i} tier={t}: mixed-tier stream diverged\n"
+            f"mixed: {mixed[i]}\nsolo:  {solo[i]}"
+        )
+
+print("OK")
